@@ -1,0 +1,65 @@
+"""Shared benchmark utilities: timing, problem zoo, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparse import csr_from_dense
+from repro.sparse.random import random_dense_sparse, random_graph_csr
+
+
+def timeit(fn: Callable, *args, reps: int = 20, warmup: int = 3) -> float:
+    """Median seconds per call (steady state)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+def naive_spmv_fn(rows: int, nnz: int):
+    def naive(val, col, row_ptr, v):
+        row = jnp.repeat(jnp.arange(rows, dtype=jnp.int32),
+                         jnp.diff(row_ptr), total_repeat_length=nnz)
+        return jax.ops.segment_sum(val * v[col], row, num_segments=rows)
+    return naive
+
+
+# problem zoo: stands in for the paper's UFlorida matrices + app inputs
+def problem_suite() -> Dict[str, object]:
+    out = {}
+    out["erdos_8k"] = random_graph_csr(8192, avg_degree=12, seed=0)
+    out["erdos_4k"] = random_graph_csr(4096, avg_degree=16, seed=1)
+    out["powerlaw_4k"] = csr_from_dense(
+        random_dense_sparse(4096, 4096, 0.002, seed=2, skew=1.0))
+    out["banded_8k"] = _banded(8192, 9)
+    out["dense_block_2k"] = csr_from_dense(
+        random_dense_sparse(2048, 2048, 0.05, seed=3))
+    return out
+
+
+def _banded(n: int, band: int):
+    d = np.zeros((n, n), np.float32)
+    rng = np.random.default_rng(4)
+    for off in range(-(band // 2), band // 2 + 1):
+        idx = np.arange(max(0, -off), min(n, n - off))
+        d[idx, idx + off] = rng.standard_normal(idx.shape[0])
+    return csr_from_dense(d)
+
+
+def vec_for(csr) -> jax.Array:
+    return jnp.asarray(np.random.default_rng(9).standard_normal(
+        csr.shape[1]).astype(np.float32))

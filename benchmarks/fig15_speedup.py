@@ -1,0 +1,128 @@
+"""Paper Fig. 15: geomean speedup of LiLAC-accelerated applications over
+the '-O2' baseline, per application.
+
+Baseline fidelity: the paper's baseline is *sequential compiler-generated
+code* — clang/icc cannot vectorize or parallelize sparse loops (their
+Table 3). The JAX analogue is the element-wise fori_loop SpMV (what a
+C loop becomes), which XLA:CPU likewise executes sequentially. LiLAC
+detects the loop skeleton (control-flow matching, §4.1) and replaces it
+with a vectorized harness — the same transformation the paper performs.
+
+Applications: CG (NPB), SpMV (Parboil), PageRank, BFS, PFold-like
+committor solve (PATHSAMPLE analogue).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, problem_suite, timeit, vec_for
+from repro.core import lilac_accelerate
+from repro.sparse.ops import row_ids_from_row_ptr
+
+
+def loop_spmv_fn(rows: int, nnz: int):
+    """The sequential element loop — the '-O2 baseline' formulation."""
+    def naive(val, row, col, v):
+        def body(j, out):
+            return out.at[row[j]].add(val[j] * v[col[j]])
+        return jax.lax.fori_loop(0, nnz, body, jnp.zeros(rows))
+    return naive
+
+
+def _fit(x, cols):
+    if x.shape[0] == cols:
+        return x
+    if x.shape[0] > cols:
+        return x[:cols]
+    return jnp.pad(x, (0, cols - x.shape[0]))
+
+
+def _apps(csr, vec):
+    rows = csr.rows
+    cols = csr.shape[1]
+
+    def cg_app(spmv, args, iters=5):
+        x = jnp.zeros(rows)
+        r = _fit(vec, rows)
+        p = r
+        rs = jnp.dot(r, r)
+        for _ in range(iters):
+            ap = spmv(*args, _fit(p, cols))
+            alpha = rs / (jnp.dot(p, ap) + 1e-9)
+            x = x + alpha * p
+            r = r - alpha * ap
+            rs2 = jnp.dot(r, r)
+            p = r + (rs2 / (rs + 1e-9)) * p
+            rs = rs2
+        return x
+
+    def spmv_app(spmv, args):
+        return spmv(*args, vec)
+
+    def pagerank_app(spmv, args, iters=5):
+        x = jnp.ones(rows) / rows
+        for _ in range(iters):
+            x = 0.85 * spmv(*args, _fit(x, cols)) + 0.15 / rows
+        return x
+
+    def bfs_app(spmv, args, steps=4):
+        frontier = jnp.zeros(rows).at[0].set(1.0)
+        visited = frontier
+        for _ in range(steps):
+            nxt = spmv(*args, _fit(frontier, cols))
+            frontier = jnp.where((nxt > 0) & (visited == 0), 1.0, 0.0)
+            visited = jnp.maximum(visited, frontier)
+        return visited
+
+    def pfold_app(spmv, args, iters=5):
+        x = jnp.linspace(0, 1, rows)
+        for _ in range(iters):
+            x = spmv(*args, _fit(x, cols))
+            x = x.at[0].set(0.0).at[-1].set(1.0)
+        return x
+
+    return {"NPB-CG": cg_app, "Parboil-SPMV": spmv_app,
+            "PageRank": pagerank_app, "BFS": bfs_app, "PFold": pfold_app}
+
+
+def run(reps: int = 3) -> dict:
+    suite = problem_suite()
+    # cap problem sizes: the sequential baseline is O(nnz) per call
+    probs = {k: v for k, v in suite.items()
+             if k in ("erdos_4k", "powerlaw_4k", "dense_block_2k")}
+    results = {}
+    for app_name in ("NPB-CG", "Parboil-SPMV", "PageRank", "BFS", "PFold"):
+        speedups = []
+        for prob_name, csr in probs.items():
+            vec = vec_for(csr)
+            row = row_ids_from_row_ptr(csr.row_ptr, csr.nnz)
+            args = (csr.val, row, csr.col_ind)
+            naive = loop_spmv_fn(csr.rows, csr.nnz)
+            apps = _apps(csr, vec)
+            app = apps[app_name]
+            base = jax.jit(naive)
+            t_naive = timeit(lambda: app(base, args), reps=reps, warmup=1)
+            # the paper's model: insertion at compile time (jit'd rewrite)
+            from repro.core import lilac_optimize
+            opt = lilac_optimize(naive)
+            acc = jax.jit(lambda *a: opt(*a))
+            t_lilac = timeit(lambda: app(acc, args), reps=reps, warmup=1)
+            speedups.append(t_naive / t_lilac)
+        geo = float(np.exp(np.mean(np.log(speedups))))
+        results[app_name] = geo
+        emit(f"fig15.{app_name}", 0.0,
+             f"geomean_speedup={geo:.2f}x over sequential-loop baseline "
+             f"(per-problem: "
+             + " ".join(f"{s:.2f}x" for s in speedups) + ")")
+    emit("fig15.note", 0.0,
+         "XLA:CPU compiles the scalar loop baseline ~100x better than the "
+         "paper's clang -O2 (it IS an optimizing tensor compiler), so "
+         "speedups here are compressed vs the paper's 1.1-12x; the "
+         "TPU-target headroom is quantified in kernels/roofline instead")
+    return results
+
+
+if __name__ == "__main__":
+    run()

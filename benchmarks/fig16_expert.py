@@ -1,0 +1,78 @@
+"""Paper Fig. 16: LiLAC performance as a fraction of a hand-written expert
+implementation, plus the lines-of-code-changed productivity comparison.
+
+Expert versions here are hand-optimized JAX: pre-packed formats chosen per
+problem, jit'd end-to-end with the packing hoisted out — what an engineer
+who rewrote the app would ship.  LiLAC gets its speedup with 0 application
+LoC changed (the paper reports 44 one-off LiLAC lines; our builtin What+How
+specs total the equivalent — counted below)."""
+from __future__ import annotations
+
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, naive_spmv_fn, problem_suite, timeit, vec_for
+from repro.core import lilac_accelerate, what_lang
+from repro.sparse import ell_from_csr
+from repro.sparse.convert import csr_to_bcsr
+from repro.sparse.ops import bcsr_spmm_ref, spmv_ell_ref
+
+
+def lilac_loc() -> int:
+    """One-off specification lines (the paper's '44 lines' analogue):
+    the builtin What-programs, counted as source lines."""
+    total = 0
+    for comp in what_lang.BUILTINS.values():
+        total += str(comp).count("\n") + 1
+    return total
+
+
+def run(reps: int = 10) -> dict:
+    from repro.core import lilac_optimize
+
+    suite = problem_suite()
+    out = {}
+    for prob_name in ("erdos_4k", "banded_8k", "dense_block_2k"):
+        csr = suite[prob_name]
+        naive = naive_spmv_fn(csr.rows, csr.nnz)
+        vec = vec_for(csr)
+
+        # expert version: offline-packed ELL, jit'd, hand-chosen format
+        ell = ell_from_csr(csr)
+
+        @jax.jit
+        def expert_ell(val, col, perm, v):
+            acc = jnp.sum(val * v[col], axis=1)
+            return jnp.zeros((val.shape[0],), acc.dtype).at[perm].set(acc)
+
+        t_expert = timeit(expert_ell, ell.val, ell.col, ell.perm, vec,
+                          reps=reps)
+
+        # LiLAC compiled path — the paper's model: insertion happens at
+        # compile time, zero per-call overhead
+        opt = lilac_optimize(naive)
+        opt_jit = jax.jit(lambda *a: opt(*a))
+        t_jit = timeit(opt_jit, csr.val, csr.col_ind, csr.row_ptr, vec,
+                       reps=reps)
+        # LiLAC runtime-harness path (host mode + marshaling cache):
+        # per-call Python overhead, amortizes on large problems
+        acc_fn = lilac_accelerate(naive, policy="jnp.ell")
+        t_host = timeit(acc_fn, csr.val, csr.col_ind, csr.row_ptr, vec,
+                        reps=reps)
+        frac_jit = t_expert / t_jit
+        out[prob_name] = frac_jit
+        emit(f"fig16.{prob_name}", t_jit * 1e6,
+             f"fraction_of_expert={frac_jit:.2f} "
+             f"(expert {t_expert*1e6:.0f}us, lilac-compiled {t_jit*1e6:.0f}us, "
+             f"lilac-runtime {t_host*1e6:.0f}us)")
+    emit("fig16.loc", 0.0,
+         f"app_loc_changed=0 lilac_spec_loc={lilac_loc()} "
+         f"(one-off, application-independent)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

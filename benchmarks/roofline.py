@@ -1,0 +1,127 @@
+"""§Roofline: derive the three roofline terms per (arch x shape) from the
+dry-run's compiled artifacts (experiments/dryrun/*.json).
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = collective_bytes_per_device / link_bw
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+All parsed quantities are loop-corrected per-device numbers (see
+launch/dryrun.analyze_hlo).  CPU-backend caveat: XLA:CPU upcasts bf16 to
+f32 before some collectives; raw terms are reported as parsed, and a
+bf16-corrected collective estimate (x0.5 on f32 collective bytes) is shown
+alongside.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+SHAPE_TOKENS = {
+    "train_4k": 4096 * 256,
+    "prefill_32k": 32768 * 32,
+    "decode_32k": 128,        # one new token per sequence
+    "long_500k": 1,
+}
+TRAIN_FLOP_FACTOR = {"train_4k": 6, "prefill_32k": 2,
+                     "decode_32k": 2, "long_500k": 2}
+
+
+def load_cells(jobs_dir: str = "experiments/dryrun",
+               mesh: str = "single") -> List[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(jobs_dir, f"*__{mesh}.json"))):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def roofline_row(cell: dict) -> Optional[dict]:
+    if cell.get("status") != "ok":
+        return None
+    n_dev = cell["n_devices"]
+    flops_dev = cell["flops"]
+    # HBM traffic estimate: >=1MB tensors x2 (r+w); small per-step scan
+    # values are VMEM-resident on the TPU target
+    bytes_dev = cell.get("bytes_hbm_est", cell["bytes_proxy"])
+    coll_dev = cell["collectives"]["total_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    t_coll_bf16 = t_coll * 0.5   # CPU-backend f32-upcast correction bound
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll_bf16}
+    dominant = max(terms, key=terms.get)
+    model_flops = (TRAIN_FLOP_FACTOR[cell["shape"]]
+                   * cell["params_active"] * SHAPE_TOKENS[cell["shape"]])
+    hlo_flops_global = flops_dev * n_dev
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    # roofline fraction: ideal time (model flops at peak) / achievable time
+    t_ideal = model_flops / (n_dev * PEAK_FLOPS)
+    t_bound = max(terms.values())
+    frac = t_ideal / t_bound if t_bound > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "t_collective_bf16_s": t_coll_bf16,
+        "dominant": dominant,
+        "model_flops": model_flops,
+        "useful_flop_ratio": useful,
+        "roofline_fraction": frac,
+        "suggestion": _suggestion(cell, dominant, useful),
+    }
+
+
+def _suggestion(cell, dominant, useful) -> str:
+    if dominant == "collective":
+        return ("cut collective bytes: bf16 collectives, sequence-parallel "
+                "AG/RS instead of AR, fewer FSDP regathers per microbatch")
+    if dominant == "memory":
+        if cell["shape"] in ("decode_32k", "long_500k"):
+            return ("decode is weight/KV-bound: quantize KV cache to int8 "
+                    "and batch more requests per step")
+        return "raise arithmetic intensity: larger fused blocks, less remat"
+    if useful < 0.5:
+        return ("compute-bound but wasteful: reduce remat recompute, skip "
+                "masked attention blocks, lower MoE capacity factor")
+    return "near compute roofline: overlap remaining collectives"
+
+
+def run(jobs_dir: str = "experiments/dryrun") -> List[dict]:
+    rows = []
+    for cell in load_cells(jobs_dir, "single"):
+        r = roofline_row(cell)
+        if r is None:
+            print(f"roofline.{cell['arch']}.{cell['shape']},0.0,"
+                  f"SKIP({cell.get('reason', cell.get('status'))[:60]})")
+            continue
+        rows.append(r)
+        print(f"roofline.{r['arch']}.{r['shape']},0.0,"
+              f"compute={r['t_compute_s']:.3f}s memory={r['t_memory_s']:.3f}s "
+              f"collective={r['t_collective_bf16_s']:.3f}s "
+              f"dominant={r['dominant']} useful={r['useful_flop_ratio']:.2f} "
+              f"roofline_frac={r['roofline_fraction']:.3f}")
+    return rows
+
+
+def markdown_table(rows: List[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s (bf16-corr) "
+           "| dominant | MODEL/HLO flops | roofline frac | next lever |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} "
+            f"| {r['t_memory_s']:.3f} | {r['t_collective_bf16_s']:.3f} "
+            f"| **{r['dominant']}** | {r['useful_flop_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {r['suggestion'][:58]} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig15,...] [--fast]
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig15,fig16,tab2,fig18,tab3,roofline,kernels")
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer reps (CI mode)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    print("name,us_per_call,derived")
+    failures = 0
+    if want("tab3"):
+        from benchmarks import tab3_detection
+        failures += _run("tab3", tab3_detection.run)
+    if want("fig15"):
+        from benchmarks import fig15_speedup
+        failures += _run("fig15", fig15_speedup.run,
+                         reps=2 if args.fast else 5)
+    if want("fig16"):
+        from benchmarks import fig16_expert
+        failures += _run("fig16", fig16_expert.run,
+                         reps=3 if args.fast else 10)
+    if want("tab2"):
+        from benchmarks import tab2_backends
+        failures += _run("tab2", tab2_backends.run,
+                         reps=3 if args.fast else 10)
+    if want("fig18"):
+        from benchmarks import fig18_marshaling
+        failures += _run("fig18", fig18_marshaling.run,
+                         reps=2 if args.fast else 5)
+    if want("kernels"):
+        from benchmarks import kernel_analysis
+        failures += _run("kernels", kernel_analysis.run)
+    if want("roofline"):
+        from benchmarks import roofline
+        failures += _run("roofline", roofline.run)
+    sys.exit(1 if failures else 0)
+
+
+def _run(name, fn, **kw):
+    try:
+        fn(**kw)
+        return 0
+    except Exception:
+        print(f"{name}.ERROR,0.0,{traceback.format_exc(limit=2)!r}")
+        return 1
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Table 2 / Fig. 17: per-backend speedups across applications and
+inputs — demonstrating that no backend wins everywhere (the reason the
+harness registry supports per-platform selection and autotuning)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, naive_spmv_fn, problem_suite, timeit, vec_for
+from repro.core import lilac_accelerate
+
+BACKENDS = ["jnp.segment", "jnp.ell", "jnp.bcsr", "jnp.dense"]
+
+
+def run(reps: int = 10) -> dict:
+    """Two calling contexts per (problem, backend):
+    steady — matrix reused across calls (marshaling amortized; the
+             PageRank/CG regime), and
+    cold   — matrix changes every call (conversion on the critical path;
+             the streaming regime).
+    The winner flips between contexts and problems — the paper's Table 2
+    conclusion (no universally-best backend) in single-platform form."""
+    suite = problem_suite()
+    table = {}
+    best = {}
+    for prob_name, csr in suite.items():
+        naive = naive_spmv_fn(csr.rows, csr.nnz)
+        vec = vec_for(csr)
+        base = jax.jit(naive)
+        t_naive = timeit(base, csr.val, csr.col_ind, csr.row_ptr, vec,
+                         reps=reps)
+        row = {}
+        for backend in BACKENDS:
+            try:
+                acc = lilac_accelerate(naive, policy=backend)
+                t = timeit(acc, csr.val, csr.col_ind, csr.row_ptr, vec,
+                           reps=reps)
+                row[(backend, "steady")] = t_naive / t
+
+                def cold_call():
+                    acc.cache.clear()
+                    return acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+
+                t_cold = timeit(cold_call, reps=max(2, reps // 3))
+                row[(backend, "cold")] = t_naive / t_cold
+            except Exception:
+                row[(backend, "steady")] = float("nan")
+                row[(backend, "cold")] = float("nan")
+        table[prob_name] = row
+        for ctx in ("steady", "cold"):
+            cands = [b for b in BACKENDS if row[(b, ctx)] == row[(b, ctx)]]
+            winner = max(cands, key=lambda b: row[(b, ctx)])
+            best[(prob_name, ctx)] = winner
+            cells = " ".join(f"{b}={row[(b, ctx)]:.2f}x" for b in cands)
+            emit(f"tab2.{prob_name}.{ctx}", t_naive,
+                 f"{cells} best={winner}")
+    emit("tab2.distinct_winners", 0.0,
+         f"n={len(set(best.values()))} of {len(BACKENDS)} backends win in "
+         f"some (problem x context) cell")
+    return table
+
+
+if __name__ == "__main__":
+    run()

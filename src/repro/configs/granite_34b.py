@@ -1,0 +1,17 @@
+"""granite-34b — llama-arch dense, code, MQA (kv=1).
+[dense] 88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152
+[arXiv:2405.04324; hf]
+"""
+from repro.configs.base import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="granite-34b",
+    family="dense",
+    n_layers=88,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=1,
+    d_ff=24576,
+    vocab=49152,
+    source="[arXiv:2405.04324; hf]",
+))

@@ -1,0 +1,22 @@
+"""repro.core — LiLAC: the paper's contribution as a composable JAX module.
+
+Public API:
+    lilac_optimize(fn)    trace-mode rewritten function (jit-compatible)
+    lilac_accelerate(fn)  host-mode with marshaling cache (solver apps)
+    Detector              backtracking jaxpr detection
+    REGISTRY / Harness    LiLAC-How backends
+    MarshalingCache       mprotect-analogue invariant caching
+    what_lang             the LiLAC-What language (Fig. 3)
+"""
+from repro.core.detect import Detector, DetectionReport, Match, default_detector
+from repro.core.harness import REGISTRY, CallCtx, Harness, HarnessRegistry
+from repro.core.marshal import MarshalingCache, ReadObject, TrackedArray, fingerprint
+from repro.core.pass_manager import LilacFunction, lilac_accelerate, lilac_optimize
+from repro.core import what_lang
+
+__all__ = [
+    "Detector", "DetectionReport", "Match", "default_detector",
+    "REGISTRY", "CallCtx", "Harness", "HarnessRegistry",
+    "MarshalingCache", "ReadObject", "TrackedArray", "fingerprint",
+    "LilacFunction", "lilac_accelerate", "lilac_optimize", "what_lang",
+]

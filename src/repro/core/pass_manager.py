@@ -1,0 +1,124 @@
+"""The user-facing LiLAC pass (the paper's Fig. 1 compiler flow).
+
+``lilac_optimize(fn)``  — trace-mode: returns a function with the same
+    signature whose jaxpr has detected computations replaced by jit-safe
+    harnesses.  Wrap it in ``jax.jit`` exactly like the original; this is
+    how the LM framework consumes LiLAC (MoE layers etc.).
+
+``lilac_accelerate(fn)`` — host-mode: the paper's runtime model.  Each call
+    executes the rewritten program eagerly; harnesses may be host-only and
+    use the marshaling cache, so format repacks / derived invariants are
+    amortized across calls exactly like the paper's mprotect machinery
+    (Fig. 18).  Use for solver-style apps that call the step repeatedly.
+
+Both share: trace -> normalize -> detect (backtracking) -> rewrite.
+Detection runs once per input-shape signature and is cached.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import detect as D
+from repro.core import harness as H
+from repro.core.marshal import MarshalingCache
+from repro.core.rewrite import run_rewritten
+
+
+@dataclasses.dataclass
+class CompiledEntry:
+    closed_jaxpr: Any
+    report: D.DetectionReport
+    out_tree: Any
+
+
+def _signature(flat_args) -> Tuple:
+    sig = []
+    for a in flat_args:
+        if hasattr(a, "shape") and hasattr(a, "dtype"):
+            sig.append((tuple(a.shape), str(a.dtype)))
+        else:
+            sig.append(("py", type(a).__name__, a if isinstance(a, (int, bool)) else None))
+    return tuple(sig)
+
+
+class LilacFunction:
+    """A function passed through the LiLAC pass."""
+
+    def __init__(self, fn: Callable, *, mode: str = "trace",
+                 policy: str = "default",
+                 registry: Optional[H.HarnessRegistry] = None,
+                 detector: Optional[D.Detector] = None,
+                 platform: Optional[str] = None,
+                 cache: Optional[MarshalingCache] = None,
+                 enabled: bool = True):
+        assert mode in ("trace", "host")
+        self.fn = fn
+        self.mode = mode
+        self.policy = policy
+        self.registry = registry or H.REGISTRY
+        self.detector = detector or D.default_detector()
+        self.platform = platform or jax.default_backend()
+        self.cache = cache or MarshalingCache()
+        self.enabled = enabled
+        self._compiled: Dict[Tuple, CompiledEntry] = {}
+        self.last_report: Optional[D.DetectionReport] = None
+
+    # -- compilation ---------------------------------------------------------
+
+    def _compile(self, args, kwargs) -> Tuple[CompiledEntry, List[Any]]:
+        flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        key = (_signature(flat), in_tree)
+        entry = self._compiled.get(key)
+        if entry is None:
+            cj, out_shape = jax.make_jaxpr(self.fn, return_shape=True)(*args, **kwargs)
+            ncj = D.normalize_closed_jaxpr(cj)
+            report = self.detector.detect(ncj, normalize=False)
+            out_tree = jax.tree_util.tree_structure(out_shape)
+            entry = CompiledEntry(ncj, report, out_tree)
+            self._compiled[key] = entry
+        self.last_report = entry.report
+        return entry, flat
+
+    def report_for(self, *args, **kwargs) -> D.DetectionReport:
+        entry, _ = self._compile(args, kwargs)
+        return entry.report
+
+    # -- execution -----------------------------------------------------------
+
+    def _select(self, m: D.Match, binding=None, ctx=None) -> H.Harness:
+        return self.registry.select(
+            m.computation, m.format, self.platform, self.mode,
+            policy=self.policy, binding=binding, ctx=ctx)
+
+    def _ctx_factory(self, m: D.Match) -> H.CallCtx:
+        return H.CallCtx(mode=self.mode, cache=self.cache, format=m.format,
+                         platform=self.platform)
+
+    def __call__(self, *args, **kwargs):
+        entry, flat = self._compile(args, kwargs)
+        matches = entry.report.matches if self.enabled else []
+        outs = run_rewritten(entry.closed_jaxpr, matches, self._select,
+                             flat, self._ctx_factory)
+        return jax.tree_util.tree_unflatten(entry.out_tree, outs)
+
+
+def lilac_optimize(fn: Callable, *, policy: str = "default",
+                   registry=None, detector=None, platform=None,
+                   enabled: bool = True) -> LilacFunction:
+    """Trace-mode LiLAC pass: jit-compatible rewritten function."""
+    return LilacFunction(fn, mode="trace", policy=policy, registry=registry,
+                         detector=detector, platform=platform, enabled=enabled)
+
+
+def lilac_accelerate(fn: Callable, *, policy: str = "default",
+                     registry=None, detector=None, platform=None,
+                     cache: Optional[MarshalingCache] = None,
+                     enabled: bool = True) -> LilacFunction:
+    """Host-mode LiLAC pass: eager execution with marshaling cache."""
+    return LilacFunction(fn, mode="host", policy=policy, registry=registry,
+                         detector=detector, platform=platform, cache=cache,
+                         enabled=enabled)

@@ -1,0 +1,146 @@
+"""Code replacement (paper §4.1.2): splice harness calls into jaxprs.
+
+The paper inserts a harness call before the matched loop nest, removes the
+result store, and lets DCE sweep the rest.  Here the rewritten program is a
+re-interpretation of the normalized jaxpr: every equation is re-emitted
+except the matched anchors, whose outputs come from the selected harness.
+Orphaned producers are removed by XLA DCE at jit time (trace mode) or simply
+never contribute (their values are still computed in host mode only if
+needed by unmatched consumers — the interpreter is demand-agnostic but XLA
+under jit removes them; host mode runs eqn-by-eqn and skips equations whose
+outputs feed only matched anchors).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.extend import core as jex_core
+
+from repro.core.detect import Match
+from repro.core.harness import CallCtx, Harness
+
+
+def _dead_eqns(jaxpr, matches: List[Match]) -> set:
+    """Equations whose outputs are consumed only (transitively) by matched
+    anchor equations' replaced inputs — safe to skip in host mode."""
+    anchor_ids = {id(m.anchor_eqn) for m in matches}
+    needed: set = set()
+    # live outvars of the function itself
+    live = {v for v in jaxpr.outvars if not isinstance(v, jex_core.Literal)}
+    # walk equations backwards computing liveness
+    for eqn in reversed(jaxpr.eqns):
+        if id(eqn) in anchor_ids:
+            # anchor eqn itself is replaced; its *binding* atoms stay live —
+            # they are added by the caller (binding_atoms) below.
+            continue
+        if any(ov in live for ov in eqn.outvars):
+            needed.add(id(eqn))
+            for iv in eqn.invars:
+                if not isinstance(iv, jex_core.Literal):
+                    live.add(iv)
+    return {id(e) for e in jaxpr.eqns} - needed - anchor_ids
+
+
+def run_rewritten(closed_jaxpr,
+                  matches: List[Match],
+                  select: Callable[[Match], Harness],
+                  args: List[Any],
+                  ctx_factory: Callable[[Match], CallCtx]) -> List[Any]:
+    """Evaluate ``closed_jaxpr`` with matched anchors replaced by harness
+    calls.  Traceable: under jit this builds the rewritten HLO."""
+    jaxpr = closed_jaxpr.jaxpr
+    env: Dict[Any, Any] = {}
+
+    def read(atom):
+        if isinstance(atom, jex_core.Literal):
+            return atom.val
+        return env[atom]
+
+    def write(var, val):
+        env[var] = val
+
+    for cv, cval in zip(jaxpr.constvars, closed_jaxpr.consts):
+        write(cv, cval)
+    assert len(jaxpr.invars) == len(args), (len(jaxpr.invars), len(args))
+    for iv, a in zip(jaxpr.invars, args):
+        write(iv, a)
+
+    anchor_map = {id(m.anchor_eqn): m for m in matches}
+    # liveness: skip producers that only feed replaced anchors, but keep
+    # anything a harness binding refers to.
+    binding_atoms = set()
+    for m in matches:
+        for v in m.binding.values():
+            if not isinstance(v, (int, float, bool)):
+                binding_atoms.add(v)
+    dead = _dead_eqns(jaxpr, matches)
+    dead = {eid for eid in dead
+            if not any(ov in binding_atoms
+                       for e in jaxpr.eqns if id(e) == eid
+                       for ov in e.outvars)}
+    # recompute liveness including binding atoms as roots
+    live = {v for v in jaxpr.outvars if not isinstance(v, jex_core.Literal)}
+    live |= binding_atoms
+    needed = set()
+    for eqn in reversed(jaxpr.eqns):
+        if id(eqn) in anchor_map:
+            continue
+        if any(ov in live for ov in eqn.outvars):
+            needed.add(id(eqn))
+            for iv in eqn.invars:
+                if not isinstance(iv, jex_core.Literal):
+                    live.add(iv)
+
+    for eqn in jaxpr.eqns:
+        m = anchor_map.get(id(eqn))
+        if m is not None:
+            _eval_anchor(eqn, m, select, read, write, ctx_factory)
+            continue
+        if id(eqn) not in needed:
+            continue
+        subfuns, bind_params = eqn.primitive.get_bind_params(eqn.params)
+        ans = eqn.primitive.bind(*subfuns, *map(read, eqn.invars), **bind_params)
+        if eqn.primitive.multiple_results:
+            for ov, v in zip(eqn.outvars, ans):
+                write(ov, v)
+        else:
+            write(eqn.outvars[0], ans)
+
+    return [read(v) for v in jaxpr.outvars]
+
+
+def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory):
+    binding_vals = {
+        k: (v if isinstance(v, (int, float, bool)) else read(v))
+        for k, v in m.binding.items()
+    }
+    ctx = ctx_factory(m)
+    harness = select(m, binding_vals, ctx)
+    out = harness(binding_vals, ctx)
+    if m.variant == "loop":
+        # scan anchor: outvars = (final counter, final accumulator)
+        counter_init = None
+        nconsts = eqn.params["num_consts"]
+        counter_init = read(eqn.invars[nconsts])
+        length = eqn.params["length"]
+        counter_fin = (jnp.asarray(counter_init)
+                       + jnp.asarray(length).astype(eqn.outvars[0].aval.dtype))
+        write(eqn.outvars[0], counter_fin.astype(eqn.outvars[0].aval.dtype))
+        anchor_var = eqn.outvars[1]
+        write(anchor_var, _coerce(out, anchor_var.aval))
+        # any extra outvars (shouldn't exist for matched skeleta)
+        for ov in eqn.outvars[2:]:
+            raise NotImplementedError("unexpected extra scan outputs")
+    else:
+        write(eqn.outvars[0], _coerce(out, eqn.outvars[0].aval))
+
+
+def _coerce(val, aval):
+    val = jnp.asarray(val)
+    if val.dtype != aval.dtype:
+        val = val.astype(aval.dtype)
+    if tuple(val.shape) != tuple(aval.shape):
+        val = val.reshape(aval.shape)
+    return val

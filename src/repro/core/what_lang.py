@@ -1,0 +1,414 @@
+"""LiLAC-What: the paper's specification language (Fig. 3 grammar).
+
+    program ::= COMPUTATION <name> <body>
+    body    ::= <forall> | <stmt>
+    range   ::= ( <exp> <= <name> < <exp> )
+    forall  ::= forall <range> { <body> }
+    stmt    ::= <addr> = sum <range> <exp> ;
+    addr    ::= <name> { [ <exp> ] }
+    exp     ::= <name> | <cnst> | <addr> | <exp> + <exp> | <exp> * <exp>
+
+This module provides a tokenizer, a recursive-descent parser producing the
+AST below, and the builtin What-programs used throughout the system (the
+paper's Fig. 2 spmv_csr, Fig. 5 spmv_jds, Fig. 11 dotproduct, plus the
+LM-framework computations).  The detection pass (`repro.core.detect`)
+*generates* jaxpr matchers from these ASTs, the analogue of the paper
+generating LLVM detection functions at LLVM build time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import List, Optional, Tuple, Union
+
+
+# ---------------------------------------------------------------------------
+# AST
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Const:
+    value: float
+
+    def __str__(self):
+        return repr(self.value)
+
+
+@dataclasses.dataclass(frozen=True)
+class Var:
+    name: str
+
+    def __str__(self):
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class Load:
+    """array[index] — possibly nested, e.g. a[rowstr[i]+j]."""
+    array: str
+    index: "Expr"
+
+    def __str__(self):
+        return f"{self.array}[{self.index}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Add:
+    lhs: "Expr"
+    rhs: "Expr"
+
+    def __str__(self):
+        return f"({self.lhs} + {self.rhs})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Mul:
+    lhs: "Expr"
+    rhs: "Expr"
+
+    def __str__(self):
+        return f"({self.lhs} * {self.rhs})"
+
+
+Expr = Union[Const, Var, Load, Add, Mul]
+
+
+@dataclasses.dataclass(frozen=True)
+class Range:
+    lo: Expr
+    var: str
+    hi: Expr
+
+    def __str__(self):
+        return f"({self.lo} <= {self.var} < {self.hi})"
+
+
+@dataclasses.dataclass(frozen=True)
+class SumStore:
+    """target = sum(range) expr;   target is Var (scalar) or Load (addr)."""
+    target: Union[Var, Load]
+    range: Range
+    expr: Expr
+
+    def __str__(self):
+        return f"{self.target} = sum{self.range} {self.expr};"
+
+
+@dataclasses.dataclass(frozen=True)
+class ForAll:
+    range: Range
+    body: "Body"
+
+    def __str__(self):
+        return f"forall{self.range} {{ {self.body} }}"
+
+
+Body = Union[ForAll, SumStore]
+
+
+@dataclasses.dataclass(frozen=True)
+class Computation:
+    name: str
+    body: Body
+
+    def __str__(self):
+        return f"COMPUTATION {self.name}\n{self.body}"
+
+    # -- structural helpers used by the matcher generator ------------------
+
+    def foralls(self) -> List[ForAll]:
+        out, b = [], self.body
+        while isinstance(b, ForAll):
+            out.append(b)
+            b = b.body
+        return out
+
+    def stmt(self) -> SumStore:
+        b = self.body
+        while isinstance(b, ForAll):
+            b = b.body
+        assert isinstance(b, SumStore)
+        return b
+
+    def free_arrays(self) -> List[str]:
+        """Array names loaded/stored — the harness interface (paper §3.1:
+        'it identifies the variables that are arguments to the library')."""
+        seen: List[str] = []
+
+        def walk_e(e: Expr):
+            if isinstance(e, Load):
+                if e.array not in seen:
+                    seen.append(e.array)
+                walk_e(e.index)
+            elif isinstance(e, (Add, Mul)):
+                walk_e(e.lhs)
+                walk_e(e.rhs)
+
+        def walk_b(b: Body):
+            if isinstance(b, ForAll):
+                walk_e(b.range.lo)
+                walk_e(b.range.hi)
+                walk_b(b.body)
+            else:
+                if isinstance(b.target, Load):
+                    if b.target.array not in seen:
+                        seen.append(b.target.array)
+                    walk_e(b.target.index)
+                walk_e(b.range.lo)
+                walk_e(b.range.hi)
+                walk_e(b.expr)
+
+        walk_b(self.body)
+        return seen
+
+    def free_scalars(self) -> List[str]:
+        """Loop-bound names that are not loop iterators and not arrays."""
+        iters = {f.range.var for f in self.foralls()} | {self.stmt().range.var}
+        arrays = set(self.free_arrays())
+        seen: List[str] = []
+
+        def walk_e(e: Expr):
+            if isinstance(e, Var) and e.name not in iters \
+                    and e.name not in arrays and e.name not in seen:
+                seen.append(e.name)
+            elif isinstance(e, Load):
+                walk_e(e.index)
+            elif isinstance(e, (Add, Mul)):
+                walk_e(e.lhs)
+                walk_e(e.rhs)
+
+        def walk_b(b: Body):
+            if isinstance(b, ForAll):
+                walk_e(b.range.lo)
+                walk_e(b.range.hi)
+                walk_b(b.body)
+            else:
+                if isinstance(b.target, Load):
+                    walk_e(b.target.index)
+                walk_e(b.range.lo)
+                walk_e(b.range.hi)
+                walk_e(b.expr)
+
+        walk_b(self.body)
+        return seen
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer + recursive-descent parser
+# ---------------------------------------------------------------------------
+
+_TOKEN_RE = re.compile(
+    r"\s*(?:(?P<num>\d+(?:\.\d+)?)|(?P<name>[A-Za-z_]\w*)"
+    r"|(?P<op><=|[()\[\]{}=;+*<])|(?P<bad>\S))"
+)
+
+_KEYWORDS = {"COMPUTATION", "forall", "sum"}
+
+
+class ParseError(ValueError):
+    pass
+
+
+def _tokenize(src: str) -> List[Tuple[str, str]]:
+    toks = []
+    pos = 0
+    while pos < len(src):
+        m = _TOKEN_RE.match(src, pos)
+        if not m:
+            break
+        pos = m.end()
+        if m.group("num") is not None:
+            toks.append(("num", m.group("num")))
+        elif m.group("name") is not None:
+            name = m.group("name")
+            toks.append(("kw" if name in _KEYWORDS else "name", name))
+        elif m.group("op") is not None:
+            toks.append(("op", m.group("op")))
+        elif m.group("bad") is not None:
+            raise ParseError(f"bad token {m.group('bad')!r} at {pos}")
+    return toks
+
+
+class _Parser:
+    def __init__(self, toks: List[Tuple[str, str]]):
+        self.toks = toks
+        self.i = 0
+
+    def peek(self) -> Optional[Tuple[str, str]]:
+        return self.toks[self.i] if self.i < len(self.toks) else None
+
+    def next(self) -> Tuple[str, str]:
+        if self.i >= len(self.toks):
+            raise ParseError("unexpected end of input")
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def expect(self, kind: str, value: Optional[str] = None) -> str:
+        k, v = self.next()
+        if k != kind or (value is not None and v != value):
+            raise ParseError(f"expected {value or kind}, got {v!r}")
+        return v
+
+    # program ::= COMPUTATION <name> <body>
+    def program(self) -> Computation:
+        self.expect("kw", "COMPUTATION")
+        name = self.expect("name")
+        return Computation(name=name, body=self.body())
+
+    def body(self) -> Body:
+        t = self.peek()
+        if t == ("kw", "forall"):
+            return self.forall()
+        return self.stmt()
+
+    # forall ::= forall ( exp <= name < exp ) { body }
+    def forall(self) -> ForAll:
+        self.expect("kw", "forall")
+        rng = self.range_()
+        self.expect("op", "{")
+        b = self.body()
+        self.expect("op", "}")
+        return ForAll(range=rng, body=b)
+
+    def range_(self) -> Range:
+        self.expect("op", "(")
+        lo = self.expr()
+        self.expect("op", "<=")
+        var = self.expect("name")
+        self.expect("op", "<")
+        hi = self.expr()
+        self.expect("op", ")")
+        return Range(lo=lo, var=var, hi=hi)
+
+    # stmt ::= addr = sum ( range ) expr ;
+    def stmt(self) -> SumStore:
+        target = self.addr_or_var()
+        self.expect("op", "=")
+        self.expect("kw", "sum")
+        rng = self.range_()
+        e = self.expr()
+        self.expect("op", ";")
+        return SumStore(target=target, range=rng, expr=e)
+
+    def addr_or_var(self) -> Union[Var, Load]:
+        name = self.expect("name")
+        if self.peek() == ("op", "["):
+            self.next()
+            idx = self.expr()
+            self.expect("op", "]")
+            return Load(array=name, index=idx)
+        return Var(name)
+
+    # expr with + lowest, * higher
+    def expr(self) -> Expr:
+        e = self.term()
+        while self.peek() == ("op", "+"):
+            self.next()
+            e = Add(e, self.term())
+        return e
+
+    def term(self) -> Expr:
+        e = self.atom()
+        while self.peek() == ("op", "*"):
+            self.next()
+            e = Mul(e, self.atom())
+        return e
+
+    def atom(self) -> Expr:
+        t = self.peek()
+        if t is None:
+            raise ParseError("unexpected end")
+        if t[0] == "num":
+            self.next()
+            return Const(float(t[1]) if "." in t[1] else int(t[1]))
+        if t == ("op", "("):
+            self.next()
+            e = self.expr()
+            self.expect("op", ")")
+            return e
+        return self.addr_or_var()
+
+
+def parse(src: str) -> Computation:
+    """Parse a LiLAC-What program."""
+    p = _Parser(_tokenize(src))
+    prog = p.program()
+    if p.peek() is not None:
+        raise ParseError(f"trailing tokens: {p.peek()}")
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# Builtin What-programs (paper Figs. 2, 5, 11 + framework computations)
+# ---------------------------------------------------------------------------
+
+SPMV_CSR = parse("""
+COMPUTATION spmv_csr
+forall(0 <= i < rows) {
+  output[i] = sum(rowstr[i] <= j < rowstr[i+1]) a[j] * iv[colidx[j]];
+}
+""")
+
+SPMV_COO = parse("""
+COMPUTATION spmv_coo
+forall(0 <= i < rows) {
+  output[i] = sum(0 <= j < nnz) delta[rowidx[j]] * a[j] * iv[colidx[j]];
+}
+""")
+# delta[rowidx[j]] denotes the i==rowidx[j] indicator; the generated matcher
+# realizes it as the scatter-add-by-row skeleton (see detect.py).
+
+SPMV_ELL = parse("""
+COMPUTATION spmv_ell
+forall(0 <= i < rows) {
+  output[i] = sum(0 <= j < width) val[i*width+j] * iv[colidx[i*width+j]];
+}
+""")
+
+SPMV_JDS = parse("""
+COMPUTATION spmv_jds
+forall(0 <= i < rows) {
+  output[perm[i]] = sum(0 <= j < nzcnt[i])
+      val[jd_ptr[j]+i] * vector[col_ind[jd_ptr[j]+i]];
+}
+""")
+
+DOTPRODUCT = parse("""
+COMPUTATION dotproduct
+result = sum(0 <= i < length) a[i] * b[i];
+""")
+
+GEMV = parse("""
+COMPUTATION gemv
+forall(0 <= i < rows) {
+  output[i] = sum(0 <= j < cols) mat[i*cols+j] * vec[j];
+}
+""")
+
+SPMM_CSR = parse("""
+COMPUTATION spmm_csr
+forall(0 <= i < rows) {
+  forall(0 <= n < ncols) {
+    output[i*ncols+n] = sum(rowstr[i] <= j < rowstr[i+1])
+        a[j] * dense[colidx[j]*ncols+n];
+  }
+}
+""")
+
+# The MoE expert FFN with one-hot dispatch: the sparse computation inside
+# modern LMs.  dispatch[t*E+e] is top-k sparse; computing h for all (e, t)
+# is the naive dense realization the LiLAC pass detects and replaces.
+MOE_FFN = parse("""
+COMPUTATION moe_ffn
+forall(0 <= t < tokens) {
+  out[t*dm+d] = sum(0 <= e < experts)
+      dispatch[t*experts+e] * y[e*tokens*dm+t*dm+d];
+}
+""")
+
+BUILTINS = {
+    c.name: c
+    for c in [SPMV_CSR, SPMV_COO, SPMV_ELL, SPMV_JDS, SPMM_CSR,
+              DOTPRODUCT, GEMV, MOE_FFN]
+}

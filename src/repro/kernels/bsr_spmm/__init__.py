@@ -1,0 +1,1 @@
+from repro.kernels.bsr_spmm import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,80 @@
+"""BCSR block-sparse x dense matmul on the MXU (TPU-native SpMM).
+
+Hardware adaptation (DESIGN.md §2): a GPU csrmv assigns threads to rows and
+gathers scalars — no TPU analogue.  Instead the sparse matrix is stored as
+dense (bm, bk) tiles (BCSR) sized for the MXU; the kernel walks the stored
+tiles in CSR order, streaming each tile and the matching rhs block through
+VMEM and accumulating into the output block for the current block-row.
+
+Grid: (n_tiles, nnzb) — the block index k iterates fastest, so all visits
+to one output block-row are consecutive; the accumulator lives in the
+output VMEM ref and is zeroed when a new block-row begins (is_first), the
+standard Pallas revisiting-accumulator pattern.
+
+Scalar prefetch: block_row (nnzb,) and block_col (nnzb,) arrive as SMEM
+scalars *before* the grid runs, so the BlockSpec index_maps can use them to
+steer the DMA of rhs/out tiles — this is the TPU-idiomatic equivalent of
+indirect addressing.
+
+VMEM working set per grid step:
+    blocks tile (bm, bk) + rhs tile (bk, bn) + out tile (bm, bn)
+    = 128x128 f32 x 3 = 192 KiB  « 16 MiB VMEM -> double-buffering safe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bsr_spmm_kernel(block_row_ref, block_col_ref,   # scalar prefetch (SMEM)
+                     blocks_ref, rhs_ref,            # VMEM inputs
+                     out_ref):                       # VMEM output
+    k = pl.program_id(1)
+    row = block_row_ref[k]
+    is_first = jnp.logical_or(k == 0, block_row_ref[jnp.maximum(k - 1, 0)] != row)
+
+    @pl.when(is_first)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = blocks_ref[0]                                # (bm, bk)
+    b = rhs_ref[...]                                 # (bk, bn)
+    out_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("num_block_rows", "bn", "interpret"))
+def bsr_spmm_pallas(blocks: jax.Array,      # (nnzb, bm, bk)
+                    block_col: jax.Array,   # (nnzb,) int32
+                    block_row: jax.Array,   # (nnzb,) int32, sorted
+                    dense: jax.Array,       # (K, N)
+                    num_block_rows: int,
+                    bn: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    nnzb, bm, bk = blocks.shape
+    kdim, n = dense.shape
+    assert kdim % bk == 0 and n % bn == 0, (dense.shape, (bk, bn))
+    n_tiles = n // bn
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_tiles, nnzb),
+        in_specs=[
+            # one stored tile per step k
+            pl.BlockSpec((1, bm, bk), lambda j, k, br, bc: (k, 0, 0)),
+            # rhs block steered by the prefetched block-column index
+            pl.BlockSpec((bk, bn), lambda j, k, br, bc: (bc[k], j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda j, k, br, bc: (br[k], j)),
+    )
+    out_shape = jax.ShapeDtypeStruct((num_block_rows * bm, n), jnp.float32)
+    fn = pl.pallas_call(
+        _bsr_spmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )
+    return fn(block_row, block_col, blocks, dense)

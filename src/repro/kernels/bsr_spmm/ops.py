@@ -1,0 +1,37 @@
+"""jit'd wrapper for the BCSR SpMM kernel: layout marshaling + dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.bsr_spmm.kernel import bsr_spmm_pallas
+from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
+from repro.sparse.formats import BCSR
+from repro.sparse.ops import row_ids_from_row_ptr
+
+
+def bsr_spmm(bcsr: BCSR, dense: jax.Array, bn: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """Block-sparse (BCSR) @ dense -> (rows, N) f32.
+
+    Pads N to a multiple of bn; block_row ids are derived from the pointer
+    array (a marshaled invariant when called through a LiLAC harness).
+    """
+    rows, _ = bcsr.shape
+    n = dense.shape[1]
+    pad_n = (-n) % bn
+    if pad_n:
+        dense = jnp.pad(dense, ((0, 0), (0, pad_n)))
+    block_row = row_ids_from_row_ptr(bcsr.block_rowptr, bcsr.nblocks)
+    out = bsr_spmm_pallas(bcsr.blocks, bcsr.block_col, block_row, dense,
+                          num_block_rows=bcsr.block_rows, bn=bn,
+                          interpret=interpret)
+    return out[:rows, :n]
+
+
+def bsr_spmm_oracle(bcsr: BCSR, dense: jax.Array) -> jax.Array:
+    block_row = row_ids_from_row_ptr(bcsr.block_rowptr, bcsr.nblocks)
+    out = bsr_spmm_ref(bcsr.blocks, bcsr.block_col, block_row, dense,
+                       bcsr.block_rows)
+    return out[: bcsr.shape[0]]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the BCSR block-sparse matmul kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bsr_spmm_ref(blocks: jax.Array, block_col: jax.Array, block_row: jax.Array,
+                 dense: jax.Array, num_block_rows: int) -> jax.Array:
+    """out[br*bm:(br+1)*bm, :] += blocks[k] @ dense[block_col[k]*bk:..., :]
+    for every stored block k with block_row[k] == br.
+
+    blocks:    (nnzb, bm, bk)
+    block_col: (nnzb,)  int32
+    block_row: (nnzb,)  int32 (sorted ascending — CSR block order)
+    dense:     (K, N)
+    returns    (num_block_rows * bm, N) in f32
+    """
+    nnzb, bm, bk = blocks.shape
+    n = dense.shape[1]
+    rhs = dense.reshape(dense.shape[0] // bk, bk, n)[block_col]     # (nnzb,bk,n)
+    prod = jnp.einsum("kij,kjn->kin", blocks.astype(jnp.float32),
+                      rhs.astype(jnp.float32))                      # (nnzb,bm,n)
+    out = jax.ops.segment_sum(prod, block_row, num_segments=num_block_rows)
+    return out.reshape(num_block_rows * bm, n)

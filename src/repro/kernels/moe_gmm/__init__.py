@@ -1,0 +1,1 @@
+from repro.kernels.moe_gmm import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,67 @@
+"""Group-aligned ragged grouped matmul (gmm) — the MoE expert hot loop.
+
+This is the TPU-native replacement for the naive dense-dispatch MoE that
+the LiLAC pass detects: tokens are sorted by expert, each expert's group is
+padded to a row-tile multiple so every (tm, dk) x-tile belongs to exactly
+one expert, and the per-tile expert id is scalar-prefetched so the
+BlockSpec index_map can steer the weight DMA (indirect addressing on the
+tile->expert table, the same mechanism as bsr_spmm's block indices).
+
+FLOPs: sum_e ceil(c_e/tm)*tm * D * F  ~=  T*K*D*F  (vs naive E*T*D*F) —
+exact results, no token drops (unlike capacity-factor dispatch).
+
+Grid: (m_tiles, n_tiles, k_tiles), k fastest -> f32 accumulation in the
+output VMEM block across k steps (revisiting pattern).
+
+VMEM per step (tm=dk=fn=128, bf16 in / f32 acc):
+    x (128x128x2) + w (128x128x2) + out (128x128x4) = 128 KiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(tile_expert_ref, xs_ref, w_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = xs_ref[...]                 # (tm, dk)
+    w = w_ref[0]                    # (dk, fn)
+    out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "fn", "dk", "interpret"))
+def gmm_pallas(xs: jax.Array,           # (Tp, D) group-aligned rows
+               w: jax.Array,            # (E, D, F)
+               tile_expert: jax.Array,  # (Tp//tm,) int32
+               tm: int = 128, fn: int = 128, dk: int = 128,
+               interpret: bool = False) -> jax.Array:
+    Tp, D = xs.shape
+    E, D2, F = w.shape
+    assert D == D2 and Tp % tm == 0 and D % dk == 0 and F % fn == 0, \
+        (xs.shape, w.shape, (tm, dk, fn))
+    grid = (Tp // tm, F // fn, D // dk)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, dk), lambda i, j, k, te: (i, k)),
+            pl.BlockSpec((1, dk, fn), lambda i, j, k, te: (te[i], k, j)),
+        ],
+        out_specs=pl.BlockSpec((tm, fn), lambda i, j, k, te: (i, j)),
+    )
+    fn_call = pl.pallas_call(
+        _gmm_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Tp, F), jnp.float32),
+        interpret=interpret,
+    )
+    return fn_call(tile_expert, xs, w)

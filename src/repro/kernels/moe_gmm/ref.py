@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the grouped-matmul MoE kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gmm_ref(xs: jax.Array, w: jax.Array, tile_expert: jax.Array,
+            tm: int) -> jax.Array:
+    """Group-aligned grouped matmul oracle.
+
+    xs:          (Tp, D) rows grouped by expert, groups tile-aligned
+    w:           (E, D, F)
+    tile_expert: (Tp // tm,) expert id of each row tile
+    returns      (Tp, F): xs[i] @ w[expert_of_row(i)]
+    """
+    Tp, D = xs.shape
+    row_expert = jnp.repeat(tile_expert, tm, total_repeat_length=Tp)
+    wr = w[row_expert]                      # (Tp, D, F)
+    return jnp.einsum("td,tdf->tf", xs.astype(jnp.float32),
+                      wr.astype(jnp.float32))
+
+
+def moe_ffn_ref(x, gate, idx, wg, wu, wd):
+    """Dense one-hot oracle — identical math to the naive formulation the
+    LiLAC pass detects (harness 'dense')."""
+    E = wg.shape[0]
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+    combine = jnp.einsum("tke,tk->te", onehot, gate.astype(jnp.float32))
+    xf = x.astype(jnp.float32)
+    g = jnp.einsum("td,edf->etf", xf, wg.astype(jnp.float32))
+    u = jnp.einsum("td,edf->etf", xf, wu.astype(jnp.float32))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("etf,efd->etd", h, wd.astype(jnp.float32))
+    return jnp.einsum("te,etd->td", combine, y)

@@ -1,0 +1,1 @@
+from repro.kernels.spmv_ell import kernel, ops, ref  # noqa: F401

@@ -1,0 +1,100 @@
+"""ELL/JDS row-slab SpMV on the VPU with a VMEM-resident vector.
+
+Hardware adaptation (DESIGN.md §2): the paper's JDS layout exists to give
+GPU warps coalesced loads down jagged diagonals.  On TPU the analogous
+resource is VMEM locality: rows are sorted by nnz (the JDS permutation,
+kept as a marshaled invariant), padded to a lane-aligned width (ELL slab),
+and processed in (rows_per_slab, width) VMEM tiles.  The gather
+vec[col[i,j]] stays on-chip because the full dense vector is pinned in VMEM
+across the grid (BlockSpec index_map constant-0 — Pallas keeps the block
+resident); for vectors larger than VMEM the ops layer falls back to the
+column-windowed variant below.
+
+Grid: (num_slabs,) over row slabs.
+VMEM per step: slab val+col (2 x R x W x 4B) + vector + out row block.
+For R=256, W=256, vec 64K f32: 0.5 MiB + 0.25 MiB — double-buffer safe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmv_ell_kernel(val_ref, col_ref, vec_ref, out_ref):
+    val = val_ref[...].astype(jnp.float32)       # (R, W)
+    col = col_ref[...]                           # (R, W)
+    vec = vec_ref[...].astype(jnp.float32)       # (V,)
+    gathered = jnp.take(vec, col, axis=0)        # VMEM gather on lanes
+    out_ref[...] = jnp.sum(val * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_slab", "interpret"))
+def spmv_ell_pallas(val: jax.Array,   # (rows, width)
+                    col: jax.Array,   # (rows, width) int32
+                    vec: jax.Array,   # (V,)
+                    rows_per_slab: int = 256,
+                    interpret: bool = False) -> jax.Array:
+    rows, width = val.shape
+    assert rows % rows_per_slab == 0, (rows, rows_per_slab)
+    num_slabs = rows // rows_per_slab
+    grid = (num_slabs,)
+    fn = pl.pallas_call(
+        _spmv_ell_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_slab, width), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_slab, width), lambda i: (i, 0)),
+            pl.BlockSpec((vec.shape[0],), lambda i: (0,)),  # resident
+        ],
+        out_specs=pl.BlockSpec((rows_per_slab,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(val, col, vec)
+
+
+def _spmv_ell_windowed_kernel(val_ref, col_ref, vec_ref, out_ref, *, window):
+    """Column-windowed variant: the slab's column indices are window-local
+    (marshaling pre-subtracts the window base), so only a (window,) slice of
+    the vector is resident per step."""
+    w = pl.program_id(1)
+    val = val_ref[...].astype(jnp.float32)[:, 0, :]   # (R, W)
+    col = col_ref[...][:, 0, :]
+    vec = vec_ref[...].astype(jnp.float32)
+    gathered = jnp.take(vec, col, axis=0)
+
+    @pl.when(w == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.sum(val * gathered, axis=1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("rows_per_slab", "window", "interpret"))
+def spmv_ell_windowed_pallas(val: jax.Array,   # (rows, n_windows, width)
+                             col: jax.Array,   # (rows, n_windows, width)
+                             vec: jax.Array,   # (V,) with V % window == 0
+                             rows_per_slab: int = 256,
+                             window: int = 4096,
+                             interpret: bool = False) -> jax.Array:
+    rows, n_windows, width = val.shape
+    assert rows % rows_per_slab == 0
+    assert vec.shape[0] == n_windows * window
+    grid = (rows // rows_per_slab, n_windows)
+    fn = pl.pallas_call(
+        functools.partial(_spmv_ell_windowed_kernel, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rows_per_slab, 1, width), lambda i, w: (i, w, 0)),
+            pl.BlockSpec((rows_per_slab, 1, width), lambda i, w: (i, w, 0)),
+            pl.BlockSpec((window,), lambda i, w: (w,)),
+        ],
+        out_specs=pl.BlockSpec((rows_per_slab,), lambda i, w: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
+        interpret=interpret,
+    )
+    return fn(val, col, vec)

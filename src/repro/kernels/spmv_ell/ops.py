@@ -1,0 +1,64 @@
+"""jit'd wrapper for the ELL slab SpMV kernel: padding + variant dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.spmv_ell.kernel import (
+    spmv_ell_pallas,
+    spmv_ell_windowed_pallas,
+)
+from repro.kernels.spmv_ell.ref import spmv_ell_ref
+
+# Vector sizes above this use the column-windowed variant (vector slice per
+# window instead of the whole vector resident in VMEM).
+_VMEM_VEC_LIMIT = 1 << 20  # 1M elements (4 MiB f32)
+
+
+def spmv_ell(val: jax.Array, col: jax.Array, vec: jax.Array,
+             rows_per_slab: int = 256, interpret: bool = False) -> jax.Array:
+    """ELL SpMV with row padding to the slab size."""
+    rows, width = val.shape
+    pad = (-rows) % rows_per_slab
+    if rows < rows_per_slab:
+        rows_per_slab = max(8, 1 << int(np.floor(np.log2(rows))))
+        pad = (-rows) % rows_per_slab
+    if pad:
+        val = jnp.pad(val, ((0, pad), (0, 0)))
+        col = jnp.pad(col, ((0, pad), (0, 0)))
+    if vec.shape[0] <= _VMEM_VEC_LIMIT:
+        out = spmv_ell_pallas(val, col, vec, rows_per_slab=rows_per_slab,
+                              interpret=interpret)
+    else:
+        out = _windowed(val, col, vec, rows_per_slab, interpret)
+    return out[:rows]
+
+
+def _windowed(val, col, vec, rows_per_slab, interpret, window: int = 1 << 16):
+    rows, width = val.shape
+    v = vec.shape[0]
+    pad_v = (-v) % window
+    if pad_v:
+        vec = jnp.pad(vec, (0, pad_v))
+    n_windows = vec.shape[0] // window
+    # split each row's slots by column window; pad each window's slot list
+    # to `width` (worst case all slots in one window).  The marshaling layer
+    # does this once per matrix; here we do it with jnp for completeness.
+    wid = col // window
+    val3 = jnp.zeros((rows, n_windows, width), val.dtype)
+    col3 = jnp.zeros((rows, n_windows, width), col.dtype)
+    # position within (row, window): stable cumsum trick
+    onehot = jax.nn.one_hot(wid, n_windows, dtype=jnp.int32)     # (R,W,nw)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                    # (R,W,nw)
+    pos = jnp.take_along_axis(pos, wid[..., None], axis=2)[..., 0]
+    r = jnp.arange(rows)[:, None] + jnp.zeros_like(col)
+    val3 = val3.at[r, wid, pos].set(val)
+    col3 = col3.at[r, wid, pos].set(col % window)
+    return spmv_ell_windowed_pallas(val3, col3, vec,
+                                    rows_per_slab=rows_per_slab,
+                                    window=window, interpret=interpret)
+
+
+def spmv_ell_oracle(val, col, vec):
+    return spmv_ell_ref(val, col, vec)

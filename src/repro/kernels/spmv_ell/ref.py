@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the ELL row-slab SpMV kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(val: jax.Array, col: jax.Array, vec: jax.Array) -> jax.Array:
+    """out[i] = sum_j val[i, j] * vec[col[i, j]]  (padding: val==0)."""
+    return jnp.sum(val.astype(jnp.float32)
+                   * vec.astype(jnp.float32)[col], axis=1)

@@ -1,0 +1,12 @@
+"""Model zoo: every assigned architecture family, built functionally.
+
+spec.py        ParamSpec trees: shapes + logical axes -> init / abstract /
+               NamedSharding (the MaxText-style logical-axis system)
+layers.py      norms, rotary, GQA attention (chunked online-softmax),
+               SwiGLU MLP, MoE (naive / lilac-rewritten / grouped)
+rwkv.py        RWKV6 (Finch) time-mix with data-dependent decay
+mamba.py       Mamba selective SSM (Jamba's recurrent block)
+transformer.py block assembly, scan-over-layers, train/prefill/decode
+factory.py     build(config) -> Model
+"""
+from repro.models.factory import build_model  # noqa: F401

@@ -1,0 +1,122 @@
+"""Model factory: ArchConfig -> Model (spec + step functions + input specs)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models import spec as S
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+    spec: Dict[str, Any]
+
+    # -- parameters -----------------------------------------------------------
+
+    def init(self, key: jax.Array):
+        return S.init_params(self.spec, key)
+
+    def abstract_params(self):
+        return S.abstract_params(self.spec)
+
+    def param_count(self) -> int:
+        return S.count_params(self.spec)
+
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k of the experts)."""
+        cfg = self.cfg
+        total = self.param_count()
+        if not cfg.moe_experts:
+            return total
+        leaves = jax.tree.leaves_with_path(
+            self.spec, is_leaf=lambda x: isinstance(x, S.ParamSpec))
+        expert_params = 0
+        for path, p in leaves:
+            keys = "/".join(str(k) for k in path)
+            if "moe" in keys and "router" not in keys:
+                expert_params += int(np.prod(p.shape))
+        active = total - expert_params \
+            + expert_params * cfg.moe_topk // cfg.moe_experts
+        return int(active)
+
+    # -- forward paths ---------------------------------------------------------
+
+    def loss_fn(self, params, batch: Dict[str, Any]):
+        """batch: tokens/embeds + labels -> scalar loss."""
+        x, aux, _ = T.forward(self.cfg, params, batch)
+        loss = T.lm_loss(self.cfg, params, x, batch["labels"])
+        return loss + 0.01 * aux
+
+    def prefill(self, params, batch: Dict[str, Any]):
+        x, _, caches = T.forward(self.cfg, params, batch, collect_cache=True)
+        logits = T.lm_logits_last(self.cfg, params, x)
+        return logits, caches
+
+    def decode(self, params, cache, tokens, pos):
+        return T.decode_step(self.cfg, params, cache, tokens, pos)
+
+    def init_cache(self, B: int, max_seq: int):
+        return T.init_cache(self.cfg, B, max_seq)
+
+    def cache_from_prefill(self, caches, prefill_len: int, max_seq: int):
+        """Convert prefill-collected (stacked, length-S) caches into the
+        per-layer decode cache layout padded to ``max_seq``."""
+        cfg = self.cfg
+        out = {}
+        n_periods = T.n_periods(cfg)
+        for j in range(n_periods):
+            period = {}
+            for bkey, entries in caches.items():
+                ce = {}
+                for name, leaf in entries.items():
+                    sliced = leaf[j]
+                    if name in ("k", "v"):
+                        pad = max_seq - sliced.shape[1]
+                        if pad > 0:
+                            sliced = jnp.pad(
+                                sliced, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                        sliced = sliced.astype(cfg.cache_dtype)
+                    ce[name] = sliced
+                period[bkey] = ce
+            out[f"p{j}"] = period
+        return out
+
+    # -- dry-run inputs ---------------------------------------------------------
+
+    def input_specs(self, shape: ShapeConfig) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+        train:   {"tokens"/"embeds", "labels"}
+        prefill: {"tokens"/"embeds"}
+        decode:  {"tokens", "pos", "cache"}  (cache of seq_len)
+        """
+        cfg = self.cfg
+        B, Sq = shape.global_batch, shape.seq_len
+        tok = jax.ShapeDtypeStruct((B, Sq), jnp.int32)
+        emb = jax.ShapeDtypeStruct((B, Sq, cfg.d_model), cfg.param_dtype)
+        if shape.kind == "train":
+            inp = {"embeds": emb} if cfg.frontend == "stub" else {"tokens": tok}
+            inp["labels"] = jax.ShapeDtypeStruct((B, Sq), jnp.int32)
+            return inp
+        if shape.kind == "prefill":
+            return {"embeds": emb} if cfg.frontend == "stub" else {"tokens": tok}
+        if shape.kind == "decode":
+            cache = jax.eval_shape(lambda: self.init_cache(B, Sq))
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                    "pos": jax.ShapeDtypeStruct((), jnp.int32),
+                    "cache": cache}
+        raise ValueError(shape.kind)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg=cfg, spec=T.model_spec(cfg))

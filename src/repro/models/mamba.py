@@ -1,0 +1,88 @@
+"""Mamba selective SSM block (Jamba's recurrent layer, arXiv:2403.19887).
+
+Structure: in_proj -> (x, z); causal depthwise conv (k=4) + SiLU on x;
+data-dependent (dt, B, C); diagonal selective scan
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t ;  y_t = C_t . h_t + D x_t
+out = (y * SiLU(z)) @ out_proj.
+
+State: (B, d_inner, N) + conv tail (B, 3, d_inner) -> O(1) per token, which
+is what makes jamba's long_500k decode shape feasible.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamSpec
+
+F32 = jnp.float32
+CONV_K = 4
+
+
+def mamba_spec(d: int, expand: int = 2, d_state: int = 16,
+               dt_rank: int = 0) -> Dict[str, ParamSpec]:
+    di = expand * d
+    dt_rank = dt_rank or max(16, d // 16)
+    return {
+        "in_proj": ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "conv_w": ParamSpec((CONV_K, di), (None, "mlp"), dtype=F32),
+        "conv_b": ParamSpec((di,), ("mlp",), init="zeros", dtype=F32),
+        "wx_dbc": ParamSpec((di, dt_rank + 2 * d_state), ("mlp", None)),
+        "dt_proj": ParamSpec((dt_rank, di), (None, "mlp"), dtype=F32),
+        "dt_bias": ParamSpec((di,), ("mlp",), init="zeros", dtype=F32),
+        "a_log": ParamSpec((di, d_state), ("mlp", None), init="zeros",
+                           dtype=F32),
+        "d_skip": ParamSpec((di,), ("mlp",), init="ones", dtype=F32),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, tail=None):
+    """x: (B, S, di); w: (K, di) depthwise. tail: (B, K-1, di) carry."""
+    if tail is None:
+        xp = jnp.pad(x, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+              for i in range(CONV_K))
+    new_tail = xp[:, -(CONV_K - 1):, :] if CONV_K > 1 else None
+    return out + b.astype(x.dtype), new_tail
+
+
+def mamba_block(p, x, state: Tuple, d_state: int = 16):
+    """x: (B,S,D); state = (ssm (B,di,N) f32, conv_tail (B,K-1,di) f32)."""
+    B, S, D = x.shape
+    ssm, conv_tail = state
+    di = p["in_proj"].shape[1] // 2
+    dt_rank = p["dt_proj"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    xi, z = xz[..., :di], xz[..., di:]
+    xi, new_tail = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_tail)
+    xi = jax.nn.silu(xi.astype(F32)).astype(x.dtype)
+    dbc = jnp.einsum("bse,ef->bsf", xi, p["wx_dbc"]).astype(F32)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dbc[..., :dt_rank], p["dt_proj"])
+        + p["dt_bias"])                                         # (B,S,di)
+    Bm = dbc[..., dt_rank:dt_rank + d_state]                    # (B,S,N)
+    Cm = dbc[..., dt_rank + d_state:]                           # (B,S,N)
+    A = -jnp.exp(p["a_log"])                                    # (di,N)
+    xf = xi.astype(F32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp          # (B,di),(B,N),(B,N),(B,di)
+        da = jnp.exp(dt_t[..., None] * A)                       # (B,di,N)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("ben,bn->be", h, c_t)
+        return h, y
+
+    from repro.models.layers import chunked_scan
+    xs = (dt.transpose(1, 0, 2), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), xf.transpose(1, 0, 2))
+    ssm, ys = chunked_scan(step, ssm, xs)
+    y = ys.transpose(1, 0, 2) + xf * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(F32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return out, (ssm, new_tail if new_tail is not None
+                 else jnp.zeros((B, CONV_K - 1, di), F32))

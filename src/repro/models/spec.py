@@ -1,0 +1,192 @@
+"""Parameter specification trees: shape + dtype + logical sharding axes.
+
+Every module describes its parameters as a tree of ``ParamSpec``; from one
+spec tree we derive
+  * initialized parameters (for real runs),
+  * ShapeDtypeStruct stand-ins (for the dry-run — no allocation),
+  * NamedShardings via logical->mesh axis rules (the distribution config).
+
+Logical axes used across the zoo:
+  "embed"    d_model dims of weight matrices        -> FSDP axis ("data")
+  "mlp"      d_ff / expert hidden dims              -> TP axis ("model")
+  "heads"    attention-head dims (q)                -> TP axis ("model")
+  "kv_heads" kv-head dims                           -> TP if divisible
+  "vocab"    embedding/unembedding vocab dim        -> TP axis ("model")
+  "expert"   MoE expert dim                         -> EP axis ("model")
+  "layers"   scan-stacked layer dim                 -> replicated
+  None       replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"     # normal | zeros | ones
+    scale: float = 1.0       # stddev multiplier for normal init
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+# default logical->mesh rules (single pod). Multi-pod rules map "batch" to
+# ("pod", "data") and keep weight axes identical (pod replicates weights —
+# pure DP across pods; FSDP within a pod).
+SINGLE_POD_RULES: Dict[str, Any] = {
+    "batch": "data",
+    "embed": "data",      # FSDP / ZeRO-3 axis for weights
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "expert": "model",
+    "seq": None,
+    "layers": None,
+}
+
+MULTI_POD_RULES: Dict[str, Any] = {
+    **SINGLE_POD_RULES,
+    "batch": ("pod", "data"),
+}
+
+# Compute-time rules: inside the per-layer scan body, weights are
+# constrained to TP-only sharding (replicated over the FSDP axis).  The
+# storage rules above shard weights 2D (data x model) for memory; the
+# constraint makes XLA all-gather each layer's weight slice just-in-time
+# (ZeRO-3 semantics: small per-layer weight gathers instead of activation
+# all-reduces on every contraction with a data-sharded dimension).
+COMPUTE_RULES: Dict[str, Any] = {
+    **SINGLE_POD_RULES,
+    "embed": None,
+}
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_to_pspec(spec: ParamSpec, mesh: Mesh, rules: Dict[str, Any]) -> P:
+    """Logical axes -> PartitionSpec, dropping non-divisible shardings
+    (e.g. kv_heads=8 on a 16-way model axis -> replicate)."""
+    entries = []
+    used: set = set()
+    for dim, ax in zip(spec.shape, spec.axes):
+        mapped = rules.get(ax) if ax is not None else None
+        if mapped is None:
+            entries.append(None)
+            continue
+        axes = mapped if isinstance(mapped, tuple) else (mapped,)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            entries.append(None)
+            continue
+        size = int(np.prod([mesh.shape[a] for a in axes]))
+        if dim % size != 0:
+            # jit in_shardings require divisibility; replicate instead
+            # (e.g. kv=8 or vocab=504 on a 16-way axis, experts=40).  The
+            # compute path re-shards paddable dims itself (shard_map MoE).
+            entries.append(None)
+            continue
+        entries.append(axes[0] if len(axes) == 1 else axes)
+        used.update(axes)
+    return P(*entries)
+
+
+def spec_to_pspec_sizes(spec: ParamSpec, axis_sizes: Dict[str, int],
+                        rules: Dict[str, Any]) -> P:
+    """Like spec_to_pspec but with explicit axis sizes (usable at trace
+    time inside with_sharding_constraint, no Mesh object needed)."""
+    entries = []
+    used: set = set()
+    for dim, ax in zip(spec.shape, spec.axes):
+        mapped = rules.get(ax) if ax is not None else None
+        if mapped is None:
+            entries.append(None)
+            continue
+        axes = mapped if isinstance(mapped, tuple) else (mapped,)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            entries.append(None)
+            continue
+        size = int(np.prod([axis_sizes.get(a, 1) for a in axes]))
+        if dim % size != 0:
+            entries.append(None)
+            continue
+        entries.append(axes[0] if len(axes) == 1 else axes)
+        used.update(axes)
+    return P(*entries)
+
+
+def compute_pspecs(spec_tree, axis_sizes: Dict[str, int],
+                   rules: Optional[Dict[str, Any]] = None):
+    """PartitionSpec tree for compute-time constraints (TP-only weights)."""
+    rules = rules or COMPUTE_RULES
+    return jax.tree.map(
+        lambda s: spec_to_pspec_sizes(s, axis_sizes, rules),
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def tree_pspecs(spec_tree, mesh: Mesh, rules: Dict[str, Any]):
+    return jax.tree.map(
+        lambda s: spec_to_pspec(s, mesh, rules),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules: Dict[str, Any]):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, spec_to_pspec(s, mesh, rules)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def abstract_params(spec_tree):
+    """ShapeDtypeStruct stand-ins — the dry-run path, no allocation."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def init_params(spec_tree, key: jax.Array):
+    """Materialize parameters (smoke tests / examples)."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for s, k in zip(leaves, keys):
+        # np-backed constants: distinct buffers per leaf (jnp.zeros would
+        # alias identical constants, breaking donation)
+        if s.init == "zeros":
+            vals.append(jnp.asarray(np.zeros(s.shape), dtype=s.dtype))
+        elif s.init == "ones":
+            vals.append(jnp.asarray(np.ones(s.shape), dtype=s.dtype))
+        else:
+            fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            std = s.scale / np.sqrt(max(fan_in, 1))
+            vals.append((jax.random.normal(k, s.shape, jnp.float32) * std
+                         ).astype(s.dtype))
+    return jax.tree.unflatten(treedef, vals)
+
+
+def count_params(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree,
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    return int(sum(np.prod(s.shape) for s in leaves))

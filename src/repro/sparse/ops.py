@@ -1,0 +1,89 @@
+"""Reference sparse ops in pure jnp.
+
+These are the semantic oracles for the Pallas kernels AND the `jnp:*`
+harness backends that the LiLAC rewriter can splice in (the "MKL on CPU"
+analogue — XLA-native, no hand tiling).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sparse.formats import BCSR, COO, CSR, ELL, JDS
+
+
+def row_ids_from_row_ptr(row_ptr: jax.Array, nnz: int) -> jax.Array:
+    """Expand CSR row_ptr to per-nnz row ids (static nnz for jit)."""
+    rows = row_ptr.shape[0] - 1
+    return jnp.repeat(
+        jnp.arange(rows, dtype=jnp.int32),
+        jnp.diff(row_ptr),
+        total_repeat_length=nnz,
+    )
+
+
+def spmv_csr_ref(csr: CSR, vec: jax.Array) -> jax.Array:
+    """output[i] = sum_{row_ptr[i] <= j < row_ptr[i+1]} val[j] * vec[col[j]]"""
+    row = row_ids_from_row_ptr(csr.row_ptr, csr.nnz)
+    prod = csr.val * vec[csr.col_ind]
+    return jax.ops.segment_sum(prod, row, num_segments=csr.rows)
+
+
+def spmv_coo_ref(coo: COO, vec: jax.Array) -> jax.Array:
+    prod = coo.val * vec[coo.col]
+    return jax.ops.segment_sum(prod, coo.row, num_segments=coo.shape[0])
+
+
+def spmv_ell_ref(ell: ELL, vec: jax.Array) -> jax.Array:
+    """Padded-row SpMV; un-permutes at the end."""
+    acc = jnp.sum(ell.val * vec[ell.col], axis=1)
+    out = jnp.zeros((ell.shape[0],), acc.dtype)
+    return out.at[ell.perm].set(acc)
+
+
+def spmv_jds_ref(jds: JDS, vec: jax.Array) -> jax.Array:
+    """Paper Fig. 5 semantics:
+
+    output[perm[i]] = sum(0 <= j < nzcnt[i])
+        val[jd_ptr[j] + i] * vector[col_ind[jd_ptr[j] + i]]
+    """
+    rows = jds.shape[0]
+    max_nnz = jds.jd_ptr.shape[0] - 1
+    if max_nnz == 0 or jds.val.shape[0] == 0:   # all-zero matrix
+        return jnp.zeros((rows,), jds.val.dtype)
+    i = jnp.arange(rows, dtype=jnp.int32)
+
+    def body(j, acc):
+        idx = jds.jd_ptr[j] + i
+        live = jds.nzcnt > j
+        idx = jnp.where(live, idx, 0)
+        contrib = jnp.where(
+            live, jds.val[idx] * vec[jds.col_ind[idx]], 0.0
+        ).astype(acc.dtype)
+        return acc + contrib
+
+    acc = jax.lax.fori_loop(0, max_nnz, body, jnp.zeros((rows,), jds.val.dtype))
+    out = jnp.zeros((rows,), acc.dtype)
+    return out.at[jds.perm].set(acc)
+
+
+def bcsr_spmm_ref(bcsr: BCSR, dense: jax.Array) -> jax.Array:
+    """(rows, cols) block-sparse @ (cols, n) dense -> (rows, n)."""
+    bm, bn = bcsr.block_shape
+    rows, cols = bcsr.shape
+    n = dense.shape[1]
+    block_rows = rows // bm
+    nnzb = bcsr.nblocks
+    # block-row id of every stored block
+    brow = row_ids_from_row_ptr(bcsr.block_rowptr, nnzb)
+    rhs = dense.reshape(cols // bn, bn, n)[bcsr.block_col]       # (nnzb, bn, n)
+    prod = jnp.einsum("kij,kjn->kin", bcsr.blocks, rhs)          # (nnzb, bm, n)
+    out = jax.ops.segment_sum(prod, brow, num_segments=block_rows)
+    return out.reshape(rows, n)
+
+
+def spmm_csr_ref(csr: CSR, dense: jax.Array) -> jax.Array:
+    """CSR @ dense (cols, n) -> (rows, n)."""
+    row = row_ids_from_row_ptr(csr.row_ptr, csr.nnz)
+    prod = csr.val[:, None] * dense[csr.col_ind]
+    return jax.ops.segment_sum(prod, row, num_segments=csr.rows)

@@ -1,0 +1,55 @@
+"""Deterministic random sparse matrix generators (host-side numpy).
+
+Used by tests, benchmarks and the graph-analytics examples; stands in for
+the UFlorida collection matrices of the paper's evaluation (§5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sparse.formats import BCSR, CSR, bcsr_from_dense, csr_from_dense
+
+
+def random_dense_sparse(rows: int, cols: int, density: float, seed: int = 0,
+                        dtype=np.float32, skew: float = 0.0) -> np.ndarray:
+    """Dense array with ~density nonzeros; ``skew`` > 0 gives power-law rows
+    (graph-like degree distribution, the hard case for padded formats)."""
+    rng = np.random.default_rng(seed)
+    if skew > 0:
+        # per-row density drawn from a Pareto-ish distribution
+        row_density = density * (1.0 + rng.pareto(1.0 + 1.0 / skew, rows))
+        row_density = np.minimum(row_density, 1.0)
+        mask = rng.random((rows, cols)) < row_density[:, None]
+    else:
+        mask = rng.random((rows, cols)) < density
+    vals = rng.standard_normal((rows, cols)).astype(dtype)
+    return np.where(mask, vals, 0).astype(dtype)
+
+
+def random_csr(rows: int, cols: int, density: float = 0.05, seed: int = 0,
+               dtype=np.float32, skew: float = 0.0) -> CSR:
+    return csr_from_dense(random_dense_sparse(rows, cols, density, seed, dtype, skew))
+
+
+def random_bcsr(rows: int, cols: int, block_shape=(8, 128),
+                block_density: float = 0.2, seed: int = 0,
+                dtype=np.float32) -> BCSR:
+    rng = np.random.default_rng(seed)
+    bm, bn = block_shape
+    mask = rng.random((rows // bm, cols // bn)) < block_density
+    d = rng.standard_normal((rows, cols)).astype(dtype)
+    d = d * np.kron(mask, np.ones((bm, bn))).astype(dtype)
+    return bcsr_from_dense(d, block_shape)
+
+
+def random_graph_csr(nodes: int, avg_degree: float = 8.0, seed: int = 0,
+                     dtype=np.float32) -> CSR:
+    """Erdos-Renyi-ish adjacency in CSR, row-stochastic values (PageRank)."""
+    rng = np.random.default_rng(seed)
+    density = min(1.0, avg_degree / nodes)
+    mask = rng.random((nodes, nodes)) < density
+    np.fill_diagonal(mask, False)
+    d = mask.astype(dtype)
+    deg = d.sum(axis=0, keepdims=True)
+    d = np.divide(d, np.maximum(deg, 1.0), dtype=dtype)  # column-stochastic
+    return csr_from_dense(d)

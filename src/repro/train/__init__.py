@@ -1,0 +1,4 @@
+"""Training/serving substrate: optimizer, steps, checkpointing, data,
+fault tolerance."""
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update  # noqa: F401
+from repro.train.train_step import make_train_step, make_serve_step  # noqa: F401

@@ -1,0 +1,137 @@
+"""Checkpointing + fault tolerance: atomic commit, restart, elastic
+reshard across different mesh shapes, resumable data, stragglers."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.checkpoint import Checkpointer
+from repro.train.data import SyntheticLM
+from repro.train.elastic import StragglerMonitor, plan_remesh
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal((8, 16)).astype(np.float32)),
+        "b": {"scale": jnp.asarray(rng.standard_normal(16).astype(np.float32)),
+              "step": jnp.asarray(3, jnp.int32)},
+        "h": jnp.asarray(rng.standard_normal(4).astype(np.float32)
+                         ).astype(jnp.bfloat16),
+    }
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(10, t, blocking=True)
+    assert ck.latest_step() == 10
+    out = ck.restore(10, jax.tree.map(jnp.zeros_like, t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a).astype(np.float64) if a.dtype == jnp.bfloat16
+            else np.asarray(a),
+            np.asarray(b).astype(np.float64) if b.dtype == jnp.bfloat16
+            else np.asarray(b))
+
+
+def test_async_save_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ck.save(s, t)
+    ck.wait()
+    assert ck.available_steps() == [3, 4]
+
+
+def test_atomic_no_partial_checkpoint(tmp_path):
+    """A .tmp dir (crashed writer) is never listed as restorable."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(5, _tree(), blocking=True)
+    os.makedirs(tmp_path / "step_6.tmp")
+    (tmp_path / "step_6.tmp" / "junk.npy").write_bytes(b"xx")
+    assert ck.available_steps() == [5]
+
+
+def test_elastic_reshard_across_mesh_shapes(tmp_path):
+    """Save on a (4,2) mesh, restore onto (2,4) — the restart-after-resize
+    path. Runs in a subprocess with 8 host devices."""
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.train.checkpoint import Checkpointer
+
+t = {{"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}}
+mesh1 = jax.make_mesh((4, 2), ("data", "model"))
+s1 = {{"w": NamedSharding(mesh1, P("data", "model"))}}
+placed = jax.tree.map(jax.device_put, t, s1)
+ck = Checkpointer({str(tmp_path)!r})
+ck.save(1, placed, blocking=True)
+
+mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+s2 = {{"w": NamedSharding(mesh2, P("data", "model"))}}
+out = ck.restore(1, t, shardings=s2)
+assert out["w"].sharding.is_equivalent_to(s2["w"], 2)
+np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(t["w"]))
+print("ELASTIC_OK")
+"""
+    env = {**os.environ, "PYTHONPATH": os.path.join(
+        os.path.dirname(__file__), "..", "src")}
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert "ELASTIC_OK" in proc.stdout, proc.stderr[-1500:]
+
+
+def test_plan_remesh():
+    assert plan_remesh(512, 16) == (32, 16)
+    assert plan_remesh(496, 16) == (31, 16)   # one node lost
+    with pytest.raises(AssertionError):
+        plan_remesh(8, 16)
+
+
+def test_data_pipeline_pure_function_of_step():
+    d1 = SyntheticLM(vocab=100, seq_len=16, global_batch=4, seed=7)
+    d2 = SyntheticLM(vocab=100, seq_len=16, global_batch=4, seed=7)
+    b1 = d1.batch_at(123)
+    b2 = d2.batch_at(123)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(d1.batch_at(124)["tokens"], b1["tokens"])
+
+
+def test_straggler_monitor():
+    mon = StragglerMonitor(factor=3.0)
+    events = []
+    mon.on_straggler = lambda s, t, e: events.append(s)
+    for s in range(10):
+        mon.observe(s, 0.1)
+    assert mon.observe(10, 1.0)          # 10x the EWMA -> straggler
+    assert events == [10]
+    assert not mon.observe(11, 0.1)      # EWMA not poisoned by the outlier
+
+
+def test_train_restart_resumes(tmp_path):
+    from repro.configs import get_arch, smoke_config
+    from repro.models import build_model
+    from repro.train.loop import LoopConfig, train_loop
+    from repro.train.optim import AdamWConfig
+
+    cfg = smoke_config(get_arch("olmo-1b"))
+    model = build_model(cfg)
+    data = SyntheticLM(vocab=cfg.vocab, seq_len=16, global_batch=2)
+    lc = LoopConfig(steps=6, ckpt_every=3, log_every=100,
+                    ckpt_dir=str(tmp_path))
+    r1 = train_loop(model, AdamWConfig(total_steps=10), lc, data.batch_at,
+                    emit=lambda s: None)
+    lc2 = LoopConfig(steps=8, ckpt_every=100, log_every=100,
+                     ckpt_dir=str(tmp_path))
+    r2 = train_loop(model, AdamWConfig(total_steps=10), lc2, data.batch_at,
+                    emit=lambda s: None)
+    assert len(r2["history"]) == 2      # resumed at 6, ran 6..8

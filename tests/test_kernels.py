@@ -1,0 +1,115 @@
+"""Pallas kernel allclose sweeps vs the pure-jnp oracles (interpret=True).
+
+Shapes and dtypes are swept per kernel; tolerance accounts for f32
+accumulation differences only.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.sparse import ell_from_csr, random_bcsr, random_csr
+from repro.kernels.bsr_spmm import ops as bsr_ops
+from repro.kernels.spmv_ell import ops as ell_ops
+from repro.kernels.moe_gmm import ops as gmm_ops
+from repro.kernels.moe_gmm.kernel import gmm_pallas
+from repro.kernels.moe_gmm.ref import gmm_ref
+
+
+@pytest.mark.parametrize("rows,cols,n,bm,density", [
+    (256, 384, 256, 128, 0.3),
+    (128, 128, 128, 64, 0.5),
+    (384, 256, 128, 128, 0.1),
+])
+def test_bsr_spmm_shapes(rows, cols, n, bm, density):
+    bcsr = random_bcsr(rows, cols, block_shape=(bm, 128),
+                       block_density=density, seed=rows + n)
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (cols, n)).astype(np.float32))
+    ref = bsr_ops.bsr_spmm_oracle(bcsr, x)
+    out = bsr_ops.bsr_spmm(bcsr, x, interpret=True)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsr_spmm_dtypes(dtype):
+    bcsr = random_bcsr(256, 256, block_shape=(128, 128), block_density=0.4,
+                       seed=7)
+    bcsr = jax.tree.map(
+        lambda a: a.astype(dtype) if a.dtype == jnp.float32 else a, bcsr)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal(
+        (256, 128)).astype(np.float32)).astype(dtype)
+    ref = bsr_ops.bsr_spmm_oracle(bcsr, x)
+    out = bsr_ops.bsr_spmm(bcsr, x, interpret=True)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=tol, rtol=tol)
+
+
+def test_bsr_spmm_empty_block_rows():
+    """Rows with no stored blocks must produce zeros (explicit zero block)."""
+    d = np.zeros((256, 256), np.float32)
+    d[:128] = np.random.default_rng(0).standard_normal((128, 256))
+    from repro.sparse import bcsr_from_dense
+    bcsr = bcsr_from_dense(d, (128, 128))
+    x = jnp.asarray(np.random.default_rng(1).standard_normal(
+        (256, 128)).astype(np.float32))
+    out = bsr_ops.bsr_spmm(bcsr, x, interpret=True)
+    np.testing.assert_allclose(np.asarray(out)[128:], 0.0)
+    np.testing.assert_allclose(out, d @ np.asarray(x), atol=1e-3)
+
+
+@pytest.mark.parametrize("rows,cols,density,skew", [
+    (200, 300, 0.05, 0.0),
+    (64, 64, 0.2, 0.0),
+    (512, 128, 0.02, 1.0),      # power-law rows (graph-like)
+])
+def test_spmv_ell_shapes(rows, cols, density, skew):
+    csr = random_csr(rows, cols, density=density, seed=rows, skew=skew)
+    ell = ell_from_csr(csr)
+    vec = jnp.asarray(np.random.default_rng(3).standard_normal(
+        cols).astype(np.float32))
+    ref = ell_ops.spmv_ell_oracle(ell.val, ell.col, vec)
+    out = ell_ops.spmv_ell(ell.val, ell.col, vec, interpret=True)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)
+
+
+def test_spmv_ell_windowed():
+    csr = random_csr(128, 512, density=0.05, seed=11)
+    ell = ell_from_csr(csr)
+    vec = jnp.asarray(np.random.default_rng(4).standard_normal(
+        512).astype(np.float32))
+    ref = ell_ops.spmv_ell_oracle(ell.val, ell.col, vec)
+    from repro.kernels.spmv_ell.ops import _windowed
+    out = _windowed(ell.val, ell.col, vec, 8, True, window=128)
+    np.testing.assert_allclose(out[:128], ref, atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("T,D,F,E,K,tm", [
+    (64, 128, 256, 8, 2, 16),
+    (32, 96, 192, 4, 4, 8),
+    (128, 64, 128, 16, 2, 32),
+])
+def test_moe_gmm_shapes(T, D, F, E, K, tm):
+    rng = np.random.default_rng(T + E)
+    x = jnp.asarray(rng.standard_normal((T, D)).astype(np.float32))
+    gate = jnp.asarray(rng.random((T, K)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, E, (T, K)).astype(np.int32))
+    wg = jnp.asarray(rng.standard_normal((E, D, F)).astype(np.float32) * .05)
+    wu = jnp.asarray(rng.standard_normal((E, D, F)).astype(np.float32) * .05)
+    wd = jnp.asarray(rng.standard_normal((E, F, D)).astype(np.float32) * .05)
+    ref = gmm_ops.moe_ffn_oracle(x, gate, idx, wg, wu, wd)
+    out = gmm_ops.moe_ffn(x, gate, idx, wg, wu, wd, tm=tm, interpret=True)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-3)
+
+
+def test_gmm_kernel_direct():
+    """The raw group-aligned gmm vs its oracle."""
+    rng = np.random.default_rng(0)
+    Tp, D, F, E, tm = 64, 32, 64, 4, 16
+    xs = jnp.asarray(rng.standard_normal((Tp, D)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((E, D, F)).astype(np.float32))
+    te = jnp.asarray(rng.integers(0, E, Tp // tm).astype(np.int32))
+    ref = gmm_ref(xs, w, te, tm)
+    out = gmm_pallas(xs, w, te, tm=tm, fn=32, dk=16, interpret=True)
+    np.testing.assert_allclose(out, ref, atol=1e-4, rtol=1e-4)

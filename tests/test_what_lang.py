@@ -1,0 +1,59 @@
+"""LiLAC-What language: grammar, parser, AST helpers (paper Fig. 3)."""
+import pytest
+
+from repro.core import what_lang as W
+
+
+def test_parse_spmv_csr_roundtrip():
+    comp = W.BUILTINS["spmv_csr"]
+    assert comp.name == "spmv_csr"
+    foralls = comp.foralls()
+    assert len(foralls) == 1
+    assert foralls[0].range.var == "i"
+    stmt = comp.stmt()
+    assert isinstance(stmt.target, W.Load)
+    assert stmt.target.array == "output"
+    # ragged range: rowstr[i] <= j < rowstr[i+1]
+    assert isinstance(stmt.range.lo, W.Load)
+    assert stmt.range.lo.array == "rowstr"
+
+
+def test_free_arrays_defines_harness_interface():
+    comp = W.BUILTINS["spmv_csr"]
+    # paper §3.1: What identifies the variables that become harness args
+    assert set(comp.free_arrays()) == {"output", "rowstr", "a", "iv", "colidx"}
+    assert "rows" in comp.free_scalars()
+
+
+def test_parse_dot():
+    comp = W.parse("""
+    COMPUTATION dotp
+    result = sum(0 <= i < n) a[i] * b[i];
+    """)
+    assert comp.name == "dotp"
+    assert isinstance(comp.stmt().target, W.Var)
+    assert set(comp.free_arrays()) == {"a", "b"}
+
+
+def test_parse_jds_nested_index():
+    comp = W.BUILTINS["spmv_jds"]
+    stmt = comp.stmt()
+    assert isinstance(stmt.target.index, W.Load)   # output[perm[i]]
+    assert stmt.target.index.array == "perm"
+
+
+def test_parse_errors():
+    with pytest.raises(W.ParseError):
+        W.parse("COMPUTATION broken forall(0 <= i < n) {")
+    with pytest.raises(W.ParseError):
+        W.parse("NOTACOMPUTATION x")
+    with pytest.raises(W.ParseError):
+        W.parse("COMPUTATION x result = sum(0 <= i < n) a[i] * ;")
+
+
+def test_expression_precedence():
+    comp = W.parse("COMPUTATION p r = sum(0 <= i < n) a[i] * b[i] + c[i];")
+    expr = comp.stmt().expr
+    # * binds tighter than +
+    assert isinstance(expr, W.Add)
+    assert isinstance(expr.lhs, W.Mul)
