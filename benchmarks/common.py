@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -39,8 +39,17 @@ def naive_spmv_fn(rows: int, nnz: int):
 
 
 # problem zoo: stands in for the paper's UFlorida matrices + app inputs
-def problem_suite() -> Dict[str, object]:
+def problem_suite(quick: bool = False) -> Dict[str, object]:
+    """``quick=True`` is the CI smoke grid: small instances of two
+    structurally different problems, enough to exercise every backend and
+    seed the autotune cache in seconds."""
     out = {}
+    if quick:
+        out["erdos_1k"] = random_graph_csr(1024, avg_degree=12, seed=0)
+        out["banded_1k"] = _banded(1024, 9)
+        out["dense_block_512"] = csr_from_dense(
+            random_dense_sparse(512, 512, 0.05, seed=3))
+        return out
     out["erdos_8k"] = random_graph_csr(8192, avg_degree=12, seed=0)
     out["erdos_4k"] = random_graph_csr(4096, avg_degree=16, seed=1)
     out["powerlaw_4k"] = csr_from_dense(
@@ -49,6 +58,16 @@ def problem_suite() -> Dict[str, object]:
     out["dense_block_2k"] = csr_from_dense(
         random_dense_sparse(2048, 2048, 0.05, seed=3))
     return out
+
+
+def write_json_report(path: str, report: dict):
+    """Write a BENCH_*.json artifact (the perf-trajectory format: one JSON
+    object per benchmark run, uploaded by the CI bench-smoke job)."""
+    import json
+
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"wrote {path}")
 
 
 def _banded(n: int, band: int):

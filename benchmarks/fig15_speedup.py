@@ -18,7 +18,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, problem_suite, timeit, vec_for
-from repro.core import lilac_accelerate
 from repro.sparse.ops import row_ids_from_row_ptr
 
 

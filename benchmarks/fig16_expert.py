@@ -8,8 +8,6 @@ LoC changed (the paper reports 44 one-off LiLAC lines; our builtin What+How
 specs total the equivalent — counted below)."""
 from __future__ import annotations
 
-import inspect
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -17,8 +15,6 @@ import numpy as np
 from benchmarks.common import emit, naive_spmv_fn, problem_suite, timeit, vec_for
 from repro.core import lilac_accelerate, what_lang
 from repro.sparse import ell_from_csr
-from repro.sparse.convert import csr_to_bcsr
-from repro.sparse.ops import bcsr_spmm_ref, spmv_ell_ref
 
 
 def lilac_loc() -> int:

@@ -1,18 +1,42 @@
 """Paper Table 2 / Fig. 17: per-backend speedups across applications and
 inputs — demonstrating that no backend wins everywhere (the reason the
-harness registry supports per-platform selection and autotuning)."""
+harness registry supports per-platform selection and autotuning).
+
+This sweep doubles as the autotuner's external measurement pass: the
+steady-state timings it collects are recorded into the persistent autotune
+cache (``repro.core.autotune``), so a later ``lilac_accelerate(fn,
+policy="autotune")`` in ANY process warm-starts from the sweep instead of
+re-timing.  The JSON report compares the tuned selection against the static
+per-platform default on every (problem, context) cell; because the tuned
+pick is the argmin of the same measurements, it is never slower than the
+default in the report — the Table 2 "always pick the right backend" win.
+
+CLI:
+    python benchmarks/tab2_backends.py [--quick] [--reps N] [--out PATH]
+
+``--quick`` runs the small CI smoke grid and is what the bench-smoke CI job
+executes; ``--out`` (default BENCH_tab2_backends.json) is uploaded as the
+perf-trajectory artifact.
+"""
 from __future__ import annotations
 
-import jax
-import numpy as np
+import argparse
+import platform as _platform
 
-from benchmarks.common import emit, naive_spmv_fn, problem_suite, timeit, vec_for
-from repro.core import lilac_accelerate
+import jax
+
+from benchmarks.common import (emit, naive_spmv_fn, problem_suite, timeit,
+                               vec_for, write_json_report)
+from repro.core import REGISTRY, lilac_accelerate, signature_of
 
 BACKENDS = ["jnp.segment", "jnp.ell", "jnp.bcsr", "jnp.dense"]
 
 
-def run(reps: int = 10) -> dict:
+def _default_backend(plat: str) -> str:
+    return REGISTRY.default_name("spmv_csr", plat) or BACKENDS[0]
+
+
+def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
     """Two calling contexts per (problem, backend):
     steady — matrix reused across calls (marshaling amortized; the
              PageRank/CG regime), and
@@ -20,9 +44,22 @@ def run(reps: int = 10) -> dict:
              the streaming regime).
     The winner flips between contexts and problems — the paper's Table 2
     conclusion (no universally-best backend) in single-platform form."""
-    suite = problem_suite()
+    suite = problem_suite(quick=quick)
+    plat = jax.default_backend()
+    tuner = REGISTRY.autotuner
     table = {}
     best = {}
+    report = {
+        "benchmark": "tab2_backends",
+        "quick": quick,
+        "reps": reps,
+        "platform": plat,
+        "host": _platform.machine(),
+        "backends": BACKENDS,
+        "default_backend": _default_backend(plat),
+        "autotune_cache": str(tuner.cache.path),
+        "problems": {},
+    }
     for prob_name, csr in suite.items():
         naive = naive_spmv_fn(csr.rows, csr.nnz)
         vec = vec_for(csr)
@@ -30,23 +67,40 @@ def run(reps: int = 10) -> dict:
         t_naive = timeit(base, csr.val, csr.col_ind, csr.row_ptr, vec,
                          reps=reps)
         row = {}
+        abs_t = {"steady": {}, "cold": {}}
+        tune_match = None
         for backend in BACKENDS:
+            # steady and cold fail independently: a cold-path exception
+            # (repack on the critical path) must not retract the backend's
+            # already-measured steady result, or the report's winner and the
+            # autotune-cache seed would disagree about the candidate set.
             try:
                 acc = lilac_accelerate(naive, policy=backend)
                 t = timeit(acc, csr.val, csr.col_ind, csr.row_ptr, vec,
                            reps=reps)
                 row[(backend, "steady")] = t_naive / t
-
+                abs_t["steady"][backend] = t
+                if acc.last_selections and tune_match is None:
+                    # the detected Match: its binding atoms carry avals, so
+                    # it keys the same autotune signature that a later
+                    # policy="autotune" call will compute from live values.
+                    tune_match = acc.last_selections[0][0]
+            except Exception:
+                row[(backend, "steady")] = float("nan")
+                row[(backend, "cold")] = float("nan")
+                continue
+            try:
                 def cold_call():
                     acc.cache.clear()
                     return acc(csr.val, csr.col_ind, csr.row_ptr, vec)
 
                 t_cold = timeit(cold_call, reps=max(2, reps // 3))
                 row[(backend, "cold")] = t_naive / t_cold
+                abs_t["cold"][backend] = t_cold
             except Exception:
-                row[(backend, "steady")] = float("nan")
                 row[(backend, "cold")] = float("nan")
         table[prob_name] = row
+        prob_report = {"t_naive_s": t_naive, "contexts": {}}
         for ctx in ("steady", "cold"):
             cands = [b for b in BACKENDS if row[(b, ctx)] == row[(b, ctx)]]
             winner = max(cands, key=lambda b: row[(b, ctx)])
@@ -54,11 +108,64 @@ def run(reps: int = 10) -> dict:
             cells = " ".join(f"{b}={row[(b, ctx)]:.2f}x" for b in cands)
             emit(f"tab2.{prob_name}.{ctx}", t_naive,
                  f"{cells} best={winner}")
+            default = _default_backend(plat)
+            t_default = abs_t[ctx].get(default, float("nan"))
+            t_tuned = abs_t[ctx][winner]
+            prob_report["contexts"][ctx] = {
+                "times_s": abs_t[ctx],
+                "speedups_vs_naive": {b: row[(b, ctx)] for b in cands},
+                "default": default,
+                "tuned": winner,
+                "t_default_s": t_default,
+                "t_tuned_s": t_tuned,
+                "tuned_vs_default": (t_default / t_tuned
+                                     if t_tuned == t_tuned else float("nan")),
+                "tuned_never_slower": bool(t_tuned <= t_default)
+                                      if t_default == t_default else True,
+            }
+        # Seed the persistent autotune cache from the steady-state sweep:
+        # this run IS the measurement, so a later policy="autotune" process
+        # selects the winner here with zero re-timing.
+        if tune_match is not None and abs_t["steady"]:
+            m = tune_match
+            tuned = tuner.record_external(m.computation, m.format, plat,
+                                          "host", m.binding, abs_t["steady"])
+            prob_report["autotune_signature"] = signature_of(
+                m.computation, m.format, plat, m.binding)
+            prob_report["autotune_recorded"] = tuned
+        report["problems"][prob_name] = prob_report
     emit("tab2.distinct_winners", 0.0,
          f"n={len(set(best.values()))} of {len(BACKENDS)} backends win in "
          f"some (problem x context) cell")
+    report["distinct_winners"] = len(set(best.values()))
+    report["tuned_never_slower_everywhere"] = all(
+        c["tuned_never_slower"]
+        for p in report["problems"].values() for c in p["contexts"].values())
+    # End-to-end proof that the cache is live: a fresh autotune-policy pass
+    # over the last problem must select from the cache without re-timing.
+    timing_before = tuner.stats.timing_calls
+    acc = lilac_accelerate(naive, policy="autotune")
+    acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    report["warm_start"] = {
+        "selected": acc.last_selections[0][1] if acc.last_selections else None,
+        "re_timed_candidates": tuner.stats.timing_calls - timing_before,
+    }
+    if out:
+        write_json_report(out, report)
     return table
 
 
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke grid: small problems, few reps")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_tab2_backends.json",
+                    help="JSON report path ('' to skip)")
+    args = ap.parse_args(argv)
+    reps = args.reps if args.reps is not None else (3 if args.quick else 10)
+    run(reps=reps, quick=args.quick, out=args.out or None)
+
+
 if __name__ == "__main__":
-    run()
+    main()

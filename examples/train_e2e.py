@@ -10,7 +10,6 @@ Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 100] [--full]
 import argparse
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
 from repro.models import build_model

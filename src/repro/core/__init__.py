@@ -8,6 +8,7 @@ Public API:
     MarshalingCache       mprotect-analogue invariant caching
     what_lang             the LiLAC-What language (Fig. 3)
 """
+from repro.core.autotune import Autotuner, AutotuneCache, signature_of
 from repro.core.detect import Detector, DetectionReport, Match, default_detector
 from repro.core.harness import REGISTRY, CallCtx, Harness, HarnessRegistry
 from repro.core.marshal import MarshalingCache, ReadObject, TrackedArray, fingerprint
@@ -15,6 +16,7 @@ from repro.core.pass_manager import LilacFunction, lilac_accelerate, lilac_optim
 from repro.core import what_lang
 
 __all__ = [
+    "Autotuner", "AutotuneCache", "signature_of",
     "Detector", "DetectionReport", "Match", "default_detector",
     "REGISTRY", "CallCtx", "Harness", "HarnessRegistry",
     "MarshalingCache", "ReadObject", "TrackedArray", "fingerprint",

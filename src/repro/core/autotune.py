@@ -1,0 +1,546 @@
+"""Persistent, signature-keyed backend autotuning (paper §3.3 / Table 2).
+
+The paper's central empirical claim is that no sparse backend wins
+everywhere: the right harness depends on platform, format and input
+structure.  SparseX answers this by tuning once per matrix and reusing the
+decision; LiLAC inherits the idea at the harness-selection boundary.  This
+module is the persistent half of that story:
+
+* ``signature_of`` — buckets a harness-call binding into a stable key
+  ``(computation, format, platform, shape-bucket, sparsity-bucket)``.
+  Shapes are bucketed to powers of two and sparsity to decades so that
+  "the same kind of problem" re-uses one tuning decision across runs,
+  processes and slightly-different inputs.
+* ``AutotuneCache`` — versioned on-disk JSON store
+  (``~/.cache/lilac/autotune.json``, overridable via ``LILAC_AUTOTUNE_CACHE``)
+  with warm-start load, atomic writes (tempfile + ``os.replace`` under an
+  advisory ``flock``) and invalidation whenever the registered harness set
+  or registry version changes.
+* ``Autotuner`` — the selection policy.  On a cache miss it measures the
+  top-``budget`` candidates (host mode: steady-state eager calls through
+  the marshaling cache; trace mode: timed ``jax.jit`` compiles of each
+  jit-safe candidate on operands synthesized from the traced avals), pins
+  the winner, and persists it.  Under budget — or when measurement is
+  impossible — it falls back to the per-platform default.
+
+Environment knobs:
+
+  LILAC_AUTOTUNE_CACHE    cache file path (default ~/.cache/lilac/autotune.json)
+  LILAC_AUTOTUNE_BUDGET   max candidates measured per signature (default 8)
+  LILAC_AUTOTUNE_DISABLE  "1" -> never measure or persist; defaults only
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+import time
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+try:  # POSIX advisory locking for concurrent tuners; harmless to lose.
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
+
+SCHEMA_VERSION = 1
+_ENV_PATH = "LILAC_AUTOTUNE_CACHE"
+_ENV_BUDGET = "LILAC_AUTOTUNE_BUDGET"
+_ENV_DISABLE = "LILAC_AUTOTUNE_DISABLE"
+_DEFAULT_BUDGET = 8
+
+
+def default_cache_path() -> Path:
+    env = os.environ.get(_ENV_PATH)
+    if env:
+        return Path(env)
+    xdg = os.environ.get("XDG_CACHE_HOME")
+    base = Path(xdg) if xdg else Path.home() / ".cache"
+    return base / "lilac" / "autotune.json"
+
+
+def autotune_disabled() -> bool:
+    return os.environ.get(_ENV_DISABLE, "") == "1"
+
+
+def exploration_budget() -> int:
+    try:
+        return int(os.environ.get(_ENV_BUDGET, _DEFAULT_BUDGET))
+    except ValueError:
+        return _DEFAULT_BUDGET
+
+
+# ---------------------------------------------------------------------------
+# Signatures
+# ---------------------------------------------------------------------------
+
+def pow2_bucket(n: int) -> int:
+    """Round a positive extent up to the next power of two (0 stays 0)."""
+    n = int(n)
+    if n <= 0:
+        return 0
+    return 1 << (n - 1).bit_length()
+
+
+def sparsity_bucket(frac: float) -> str:
+    """Decade bucket of a density fraction: 1e-4 -> 'd-4'; unknown -> 'd?'."""
+    if not (frac > 0.0):
+        return "d?"
+    return f"d{int(np.floor(np.log10(min(frac, 1.0))))}"
+
+
+def _shape_of(v: Any) -> Optional[Tuple[int, ...]]:
+    shape = getattr(v, "shape", None)
+    if shape is None:
+        aval = getattr(v, "aval", None)
+        shape = getattr(aval, "shape", None)
+    if shape is None:
+        return None
+    return tuple(int(s) for s in shape)
+
+
+def signature_of(comp: str, fmt: str, platform: str,
+                 binding: Dict[str, Any]) -> str:
+    """Stable string key for one harness call site.
+
+    Works on concrete arrays and on tracers (shape/dtype only — no data is
+    read), so trace-mode lowering and host-mode execution agree on the key.
+    """
+    dims: List[str] = []
+    rows = nnz = cols = None
+    for k in sorted(binding):
+        v = binding[k]
+        if isinstance(v, bool):
+            dims.append(f"{k}={v}")
+        elif isinstance(v, int):
+            dims.append(f"{k}={pow2_bucket(v)}")
+            if k == "rows":
+                rows = v
+            elif k == "nnz":
+                nnz = v
+        elif isinstance(v, float):
+            continue
+        else:
+            shape = _shape_of(v)
+            if shape is not None:
+                dims.append(f"{k}={'x'.join(str(pow2_bucket(s)) for s in shape)}")
+                if k in ("iv", "vector", "vec", "dense") and shape:
+                    cols = shape[0]
+    if rows and nnz and cols:
+        sb = sparsity_bucket(nnz / float(rows * cols))
+    else:
+        sb = "d?"
+    return "|".join([comp, fmt, platform, ",".join(dims), sb])
+
+
+# ---------------------------------------------------------------------------
+# Persistent cache
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TuneStats:
+    memory_hits: int = 0
+    disk_hits: int = 0
+    misses: int = 0
+    timing_calls: int = 0      # candidate measurements performed
+    stores: int = 0
+    fallbacks: int = 0         # budget/measurability forced a default
+    invalidations: int = 0     # on-disk entries dropped (version/fingerprint)
+    save_errors: int = 0       # persistence failed (unwritable path)
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def reset(self):
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, 0)
+
+
+class AutotuneCache:
+    """Versioned JSON store of tuning decisions.
+
+    Layout::
+
+        {"schema": 1, "registry": "<fingerprint>",
+         "entries": {"<sig>": {"<mode>": {"harness": ..., "best_s": ...,
+                                          "timings": {...}}}}}
+
+    Writes are atomic (tempfile in the same directory + ``os.replace``) and
+    merge-on-save under an advisory lock, so concurrent tuners never
+    corrupt the file and rarely lose each other's entries.
+    """
+
+    def __init__(self, path: Optional[os.PathLike] = None,
+                 registry_fingerprint: str = ""):
+        self.path = Path(path) if path is not None else default_cache_path()
+        self.registry_fingerprint = registry_fingerprint
+        self.entries: Dict[str, Dict[str, Any]] = {}
+        self.stats = TuneStats()
+        self.loaded = False
+
+    # -- disk ----------------------------------------------------------------
+
+    def _read_disk(self) -> Dict[str, Dict[str, Any]]:
+        try:
+            with open(self.path, "r", encoding="utf-8") as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+        if not isinstance(doc, dict) or doc.get("schema") != SCHEMA_VERSION:
+            self.stats.invalidations += 1
+            return {}
+        if doc.get("registry") != self.registry_fingerprint:
+            self.stats.invalidations += 1
+            return {}
+        entries = doc.get("entries", {})
+        return entries if isinstance(entries, dict) else {}
+
+    def load(self) -> "AutotuneCache":
+        """Warm-start: merge on-disk entries under the in-memory ones."""
+        disk = self._read_disk()
+        for sig, modes in disk.items():
+            self.entries.setdefault(sig, {}).update(
+                {m: r for m, r in modes.items() if m not in self.entries.get(sig, {})})
+        self.loaded = True
+        return self
+
+    def save(self):
+        """Best-effort persistence: an unwritable cache location degrades to
+        in-memory tuning (counted in ``stats``) instead of failing the
+        computation the tuner is serving."""
+        try:
+            self._save()
+        except OSError:
+            self.stats.save_errors += 1
+
+    def _save(self):
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        lock_path = self.path.with_suffix(self.path.suffix + ".lock")
+        lock_f = None
+        try:
+            if fcntl is not None:
+                lock_f = open(lock_path, "a+")
+                fcntl.flock(lock_f.fileno(), fcntl.LOCK_EX)
+            merged = self._read_disk()
+            for sig, modes in self.entries.items():
+                merged.setdefault(sig, {}).update(modes)
+            doc = {"schema": SCHEMA_VERSION,
+                   "registry": self.registry_fingerprint,
+                   "entries": merged}
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=self.path.name, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w", encoding="utf-8") as f:
+                    json.dump(doc, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        finally:
+            if lock_f is not None:
+                fcntl.flock(lock_f.fileno(), fcntl.LOCK_UN)
+                lock_f.close()
+
+    # -- lookup --------------------------------------------------------------
+
+    def get(self, sig: str, mode: str) -> Optional[Dict[str, Any]]:
+        rec = self.entries.get(sig, {}).get(mode)
+        if rec is not None:
+            self.stats.memory_hits += 1
+            return rec
+        if not self.loaded:
+            self.load()
+            rec = self.entries.get(sig, {}).get(mode)
+            if rec is not None:
+                self.stats.disk_hits += 1
+                return rec
+        self.stats.misses += 1
+        return None
+
+    def put(self, sig: str, mode: str, record: Dict[str, Any],
+            persist: bool = True):
+        self.entries.setdefault(sig, {})[mode] = record
+        self.stats.stores += 1
+        if persist:
+            self.save()
+
+
+# ---------------------------------------------------------------------------
+# Operand synthesis (trace-mode measurement)
+# ---------------------------------------------------------------------------
+
+def _infer_cols(binding: Dict[str, Any], shapes: Dict[str, Tuple[int, ...]]) -> int:
+    for k in ("iv", "vector", "vec", "dense"):
+        if k in shapes and shapes[k]:
+            return shapes[k][0]
+    return 0
+
+
+def synthesize_operands(binding: Dict[str, Any], rng_seed: int = 0
+                        ) -> Optional[Dict[str, Any]]:
+    """Concrete, *semantically valid* stand-ins for traced binding atoms.
+
+    Trace-mode tuning happens at lowering time, when the real operands are
+    tracers.  We only know shapes/dtypes, so representative operands are
+    synthesized; index-carrying What-names (``colidx``/``rowstr``/``idx``…)
+    get valid index structure so candidate kernels exercise realistic
+    gather/scatter paths.  Returns None if any atom's shape is unknown.
+    """
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(rng_seed)
+    shapes: Dict[str, Tuple[int, ...]] = {}
+    dtypes: Dict[str, Any] = {}
+    scalars: Dict[str, Any] = {}
+    for k, v in binding.items():
+        if isinstance(v, (int, float, bool)):
+            scalars[k] = v
+            continue
+        shape = _shape_of(v)
+        if shape is None:
+            return None
+        shapes[k] = shape
+        aval = getattr(v, "aval", v)
+        dtypes[k] = np.dtype(getattr(aval, "dtype", np.float32))
+
+    rows = int(scalars.get("rows", 0))
+    nnz = int(scalars.get("nnz", 0))
+    experts = int(scalars.get("experts", 0))
+    cols = _infer_cols(binding, shapes)
+
+    out: Dict[str, Any] = dict(scalars)
+    for k, shape in shapes.items():
+        dt = dtypes[k]
+        if k in ("colidx", "col_ind", "col"):
+            hi = max(1, cols or (shape[-1] if shape else 1))
+            arr = rng.integers(0, hi, shape)
+        elif k in ("rowstr", "row_ptr"):
+            # uniform monotone pointer: rows+1 entries from 0..nnz
+            n = shape[0]
+            arr = np.round(np.linspace(0, nnz, n)).astype(np.int64)
+        elif k == "rowidx":
+            arr = np.sort(rng.integers(0, max(1, rows), shape))
+        elif k == "idx":
+            arr = rng.integers(0, max(1, experts), shape)
+        elif k == "perm":
+            n = shape[0]
+            arr = rng.permutation(n)
+        elif np.issubdtype(dt, np.integer):
+            arr = np.zeros(shape)
+        else:
+            arr = rng.standard_normal(shape)
+        out[k] = jnp.asarray(arr.astype(dt))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The tuner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Decision:
+    harness: str
+    source: str     # 'memory' | 'disk' | 'measured' | 'fallback'
+    sig: str
+
+
+class Autotuner:
+    """Signature-keyed backend selection with an exploration budget.
+
+    ``select`` is the single entry point; it is deterministic once the
+    cache holds a winner for the signature (zero re-timing), which is what
+    lets trace-mode pin the winner into the rewrite and lets a fresh
+    process warm-start from disk.
+    """
+
+    def __init__(self, registry_fingerprint: str = "",
+                 cache: Optional[AutotuneCache] = None,
+                 budget: Optional[int] = None,
+                 reps: int = 2):
+        self.registry_fingerprint = registry_fingerprint
+        self._cache = cache
+        self._cache_injected = cache is not None
+        self.budget = budget
+        self.reps = reps
+        self.stats = TuneStats()
+        self.last_decision: Optional[Decision] = None
+
+    # -- cache plumbing ------------------------------------------------------
+
+    @property
+    def cache(self) -> AutotuneCache:
+        """The persistent cache.  An explicitly injected cache is pinned;
+        an auto-created one re-resolves if LILAC_AUTOTUNE_CACHE moved."""
+        if self._cache_injected:
+            return self._cache
+        want = default_cache_path()
+        if self._cache is None or (self._cache.path != want
+                                   and _ENV_PATH in os.environ):
+            self._cache = AutotuneCache(
+                want, registry_fingerprint=self.registry_fingerprint)
+        return self._cache
+
+    def _budget(self) -> int:
+        return self.budget if self.budget is not None else exploration_budget()
+
+    # -- measurement ---------------------------------------------------------
+
+    def _time_host(self, h, binding, ctx) -> float:
+        """Steady-state eager timing: first call pays compile+marshal, the
+        repetitions after it are what a solver loop would see."""
+        import jax
+
+        out = h(binding, ctx)
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(max(1, self.reps)):
+            t0 = time.perf_counter()
+            out = h(binding, ctx)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def _time_trace(self, h, ctx, operands) -> float:
+        """Timed jax.jit candidate compile + steady-state run."""
+        import jax
+
+        static = {k: v for k, v in operands.items()
+                  if isinstance(v, (int, float, bool))}
+        arrays = {k: v for k, v in operands.items() if k not in static}
+
+        def call(arrs):
+            # through Harness.__call__ so BeforeFirstExecution setup runs,
+            # same as the host-mode timing path
+            return h({**static, **arrs}, ctx)
+
+        f = jax.jit(call)
+        out = f(arrays)
+        jax.block_until_ready(out)
+        best = float("inf")
+        for _ in range(max(1, self.reps)):
+            t0 = time.perf_counter()
+            out = f(arrays)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    def measure(self, cands: Sequence[Any], binding: Dict[str, Any],
+                ctx, mode: str,
+                default_name: Optional[str] = None
+                ) -> Tuple[Optional[str], Dict[str, float]]:
+        """Time up to budget candidates; return (winner_name, timings)."""
+        import jax
+
+        ranked = sorted(
+            cands, key=lambda h: (h.name != default_name,))  # default first
+        ranked = ranked[: max(0, self._budget())]
+        operands = None
+        if mode == "trace":
+            concrete = all(
+                not isinstance(v, jax.core.Tracer) and _shape_of(v) is not None
+                for v in binding.values()
+                if not isinstance(v, (int, float, bool)))
+            operands = (dict(binding) if concrete
+                        else synthesize_operands(binding))
+            if operands is None:
+                return None, {}
+        timings: Dict[str, float] = {}
+        for h in ranked:
+            try:
+                self.stats.timing_calls += 1
+                if mode == "trace":
+                    timings[h.name] = self._time_trace(h, ctx, operands)
+                else:
+                    timings[h.name] = self._time_host(h, binding, ctx)
+            except Exception:
+                continue
+        if not timings:
+            return None, {}
+        return min(timings, key=timings.get), timings
+
+    # -- selection -----------------------------------------------------------
+
+    def select(self, comp: str, fmt: str, platform: str, mode: str,
+               cands: Sequence[Any], binding: Dict[str, Any], ctx,
+               default_name: Optional[str] = None):
+        """Pick a harness from ``cands`` for this call signature.
+
+        Returns the chosen Harness, or None to tell the registry to fall
+        back to its per-platform default path.
+        """
+        if not cands:
+            return None
+        by_name = {h.name: h for h in cands}
+        sig = signature_of(comp, fmt, platform, binding)
+
+        if not autotune_disabled():
+            disk_before = self.cache.stats.disk_hits
+            rec = self.cache.get(sig, mode)
+            if rec is not None and rec.get("harness") in by_name:
+                # the cache's own stats know whether this get had to read
+                # the file; mirror that classification here
+                src = ("disk" if self.cache.stats.disk_hits > disk_before
+                       else "memory")
+                if src == "memory":
+                    self.stats.memory_hits += 1
+                else:
+                    self.stats.disk_hits += 1
+                self.last_decision = Decision(rec["harness"], src, sig)
+                return by_name[rec["harness"]]
+
+        if autotune_disabled() or self._budget() <= 0:
+            self.stats.fallbacks += 1
+            self.last_decision = Decision(default_name or cands[0].name,
+                                          "fallback", sig)
+            return None
+
+        self.stats.misses += 1
+        winner, timings = self.measure(cands, binding, ctx, mode,
+                                       default_name=default_name)
+        if winner is None:
+            self.stats.fallbacks += 1
+            self.last_decision = Decision(default_name or cands[0].name,
+                                          "fallback", sig)
+            return None
+        record = {"harness": winner,
+                  "best_s": timings[winner],
+                  "timings": timings,
+                  "platform": platform,
+                  "format": fmt}
+        self.cache.put(sig, mode, record, persist=True)
+        self.stats.stores += 1
+        self.last_decision = Decision(winner, "measured", sig)
+        return by_name[winner]
+
+    def record_external(self, comp: str, fmt: str, platform: str, mode: str,
+                        binding: Dict[str, Any],
+                        timings: Dict[str, float]) -> str:
+        """Seed the persistent cache from externally measured timings
+        (e.g. a benchmark sweep acting as the tuner).  Returns the winner."""
+        if not timings:
+            raise ValueError("record_external needs at least one timing")
+        sig = signature_of(comp, fmt, platform, binding)
+        winner = min(timings, key=timings.get)
+        self.cache.put(sig, mode, {"harness": winner,
+                                   "best_s": timings[winner],
+                                   "timings": dict(timings),
+                                   "platform": platform,
+                                   "format": fmt}, persist=True)
+        self.stats.stores += 1
+        return winner
+
+    # -- introspection -------------------------------------------------------
+
+    def pinned(self) -> Dict[Tuple[str, str], str]:
+        """(signature, mode) -> winning harness name, in-memory view."""
+        out = {}
+        for sig, modes in self.cache.entries.items():
+            for mode, rec in modes.items():
+                out[(sig, mode)] = rec.get("harness")
+        return out

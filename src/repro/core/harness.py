@@ -24,14 +24,13 @@ Backends provided out of the box:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.marshal import MarshalingCache, unwrap
+from repro.core.marshal import MarshalingCache
 
 Binding = Dict[str, Any]
 
@@ -70,16 +69,51 @@ class Harness:
 
 
 class HarnessRegistry:
-    def __init__(self):
+    def __init__(self, version: int = 0):
         self._by_comp: Dict[str, List[Harness]] = {}
         self._defaults: Dict[Tuple[str, str], str] = {}  # (comp, platform) -> name
-        self._autotune_cache: Dict[Tuple, str] = {}
+        self.version = version        # bump to invalidate persisted tunings
+        self._autotuner = None
 
     def register(self, h: Harness, default_for: Tuple[str, ...] = ()):
         self._by_comp.setdefault(h.implements, []).append(h)
         for plat in default_for:
             self._defaults[(h.implements, plat)] = h.name
+        self._autotuner = None        # harness set changed -> new fingerprint
         return h
+
+    def fingerprint(self) -> str:
+        """Stable hash of (version, registered harness set).  Persisted
+        tunings are invalidated whenever this changes."""
+        import hashlib
+
+        items = sorted(
+            (h.implements, h.name, h.platforms, h.formats, h.jit_safe)
+            for hs in self._by_comp.values() for h in hs)
+        blob = repr((self.version, items)).encode()
+        return hashlib.blake2b(blob, digest_size=8).hexdigest()
+
+    @property
+    def autotuner(self):
+        from repro.core.autotune import Autotuner
+
+        fp = self.fingerprint()
+        if self._autotuner is None or self._autotuner.registry_fingerprint != fp:
+            self._autotuner = Autotuner(registry_fingerprint=fp)
+        return self._autotuner
+
+    def reset_autotuner(self):
+        self._autotuner = None
+
+    @property
+    def _autotune_cache(self) -> Dict[Tuple, str]:
+        """Back-compat view: (signature, mode) -> winning harness name."""
+        if self._autotuner is None:
+            return {}
+        return self._autotuner.pinned()
+
+    def default_name(self, comp: str, platform: str) -> Optional[str]:
+        return self._defaults.get((comp, platform))
 
     def harnesses_for(self, comp: str) -> List[Harness]:
         return list(self._by_comp.get(comp, []))
@@ -112,43 +146,23 @@ class HarnessRegistry:
             raise KeyError(f"no harness for {comp}/{fmt} on {platform} ({mode})")
         if policy not in ("default", "autotune"):
             return self.get(comp, policy)  # explicit pin by name
-        if policy == "autotune" and mode == "host" and binding is not None:
-            return self._autotune(comp, fmt, cands, binding, ctx)
         dname = self._defaults.get((comp, platform))
+        if policy == "autotune" and binding is not None:
+            # SparseX-style persistent tuning (autotune.py): signature-keyed
+            # winner, measured once, reused across calls AND processes; in
+            # trace mode the winner is pinned at first lowering.
+            if ctx is None:
+                ctx = CallCtx(mode=mode, cache=MarshalingCache(), format=fmt,
+                              platform=platform)
+            h = self.autotuner.select(comp, fmt, platform, mode, cands,
+                                      binding, ctx, default_name=dname)
+            if h is not None:
+                return h
         if dname is not None:
             for h in cands:
                 if h.name == dname:
                     return h
         return cands[0]
-
-    def _autotune(self, comp, fmt, cands, binding, ctx) -> Harness:
-        """SparseX-style: time each candidate once on the real operands,
-        remember the winner per (computation, shape-signature)."""
-        sig = (comp, fmt, tuple(sorted(
-            (k, tuple(np.asarray(unwrap(v)).shape))
-            for k, v in binding.items()
-            if not isinstance(v, (int, float, bool)))))
-        if sig in self._autotune_cache:
-            return self.get(comp, self._autotune_cache[sig])
-        best, best_t = None, float("inf")
-        for h in cands:
-            try:
-                t0 = time.perf_counter()
-                out = h(binding, ctx)
-                jax.block_until_ready(out)
-                # second call = steady state (first pays compile + marshal)
-                t0 = time.perf_counter()
-                out = h(binding, ctx)
-                jax.block_until_ready(out)
-                dt = time.perf_counter() - t0
-            except Exception:
-                continue
-            if dt < best_t:
-                best, best_t = h, dt
-        if best is None:
-            best = cands[0]
-        self._autotune_cache[sig] = best.name
-        return best
 
 
 REGISTRY = HarnessRegistry()
@@ -186,7 +200,6 @@ def _spmv_ell_host(b: Binding, ctx: CallCtx):
     """Marshaled CSR/COO -> ELL repack (host mode): the repack is the
     'transfer' that the cache amortizes across calls (paper Fig. 18)."""
     from repro.sparse.convert import csr_to_ell
-    from repro.sparse.formats import CSR
 
     def pack():
         csr = _binding_to_csr(b)
@@ -199,7 +212,6 @@ def _spmv_ell_host(b: Binding, ctx: CallCtx):
 
 def _binding_to_csr(b: Binding):
     from repro.sparse.formats import CSR
-    import numpy as np
 
     cols = int(np.asarray(b["iv"]).shape[0])
     if "rowstr" in b:

@@ -33,6 +33,10 @@ class CompiledEntry:
     closed_jaxpr: Any
     report: D.DetectionReport
     out_tree: Any
+    # autotune pins: match index -> harness name, filled at first lowering
+    # for this signature so later calls (and re-traces under jit) reuse the
+    # measured winner without consulting the tuner again.
+    pins: Dict[int, str] = dataclasses.field(default_factory=dict)
 
 
 def _signature(flat_args) -> Tuple:
@@ -66,6 +70,9 @@ class LilacFunction:
         self.enabled = enabled
         self._compiled: Dict[Tuple, CompiledEntry] = {}
         self.last_report: Optional[D.DetectionReport] = None
+        # (match, harness-name) pairs from the most recent call, in anchor
+        # order — what actually ran, for benchmarks and tests.
+        self.last_selections: List[Tuple[D.Match, str]] = []
 
     # -- compilation ---------------------------------------------------------
 
@@ -94,6 +101,31 @@ class LilacFunction:
             m.computation, m.format, self.platform, self.mode,
             policy=self.policy, binding=binding, ctx=ctx)
 
+    def _pinned_select(self, entry: CompiledEntry):
+        """Autotune policy: delegate to the persistent tuner once per match
+        per input-signature, then pin the winner into the rewrite.  Pinning
+        only happens for definitive decisions (measured or cache-hit) so a
+        can't-measure fallback — e.g. the very first call happening under a
+        user's jit trace — stays re-tunable on later concrete calls."""
+        idx_of = {id(m.anchor_eqn): i for i, m in enumerate(entry.report.matches)}
+
+        def select(m: D.Match, binding=None, ctx=None) -> H.Harness:
+            i = idx_of[id(m.anchor_eqn)]
+            name = entry.pins.get(i)
+            if name is not None:
+                try:
+                    return self.registry.get(m.computation, name)
+                except KeyError:
+                    del entry.pins[i]   # harness set changed; re-tune
+            h = self._select(m, binding, ctx)
+            tuner = self.registry.autotuner
+            dec = tuner.last_decision
+            if dec is not None and dec.source in ("memory", "disk", "measured"):
+                entry.pins[i] = h.name
+            return h
+
+        return select
+
     def _ctx_factory(self, m: D.Match) -> H.CallCtx:
         return H.CallCtx(mode=self.mode, cache=self.cache, format=m.format,
                          platform=self.platform)
@@ -101,8 +133,13 @@ class LilacFunction:
     def __call__(self, *args, **kwargs):
         entry, flat = self._compile(args, kwargs)
         matches = entry.report.matches if self.enabled else []
-        outs = run_rewritten(entry.closed_jaxpr, matches, self._select,
-                             flat, self._ctx_factory)
+        select = (self._pinned_select(entry) if self.policy == "autotune"
+                  else self._select)
+        selections: List[Tuple[D.Match, str]] = []
+        outs = run_rewritten(entry.closed_jaxpr, matches, select,
+                             flat, self._ctx_factory,
+                             on_select=lambda m, h: selections.append((m, h.name)))
+        self.last_selections = selections
         return jax.tree_util.tree_unflatten(entry.out_tree, outs)
 
 

@@ -47,9 +47,15 @@ def run_rewritten(closed_jaxpr,
                   matches: List[Match],
                   select: Callable[[Match], Harness],
                   args: List[Any],
-                  ctx_factory: Callable[[Match], CallCtx]) -> List[Any]:
+                  ctx_factory: Callable[[Match], CallCtx],
+                  on_select: Optional[Callable[[Match, Harness], None]] = None,
+                  ) -> List[Any]:
     """Evaluate ``closed_jaxpr`` with matched anchors replaced by harness
-    calls.  Traceable: under jit this builds the rewritten HLO."""
+    calls.  Traceable: under jit this builds the rewritten HLO.
+
+    ``on_select`` (if given) observes every (match, chosen harness) pair —
+    the pass manager uses it to pin autotuned winners into the rewrite and
+    benchmarks use it to report which backend actually ran."""
     jaxpr = closed_jaxpr.jaxpr
     env: Dict[Any, Any] = {}
 
@@ -96,7 +102,7 @@ def run_rewritten(closed_jaxpr,
     for eqn in jaxpr.eqns:
         m = anchor_map.get(id(eqn))
         if m is not None:
-            _eval_anchor(eqn, m, select, read, write, ctx_factory)
+            _eval_anchor(eqn, m, select, read, write, ctx_factory, on_select)
             continue
         if id(eqn) not in needed:
             continue
@@ -111,13 +117,16 @@ def run_rewritten(closed_jaxpr,
     return [read(v) for v in jaxpr.outvars]
 
 
-def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory):
+def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory,
+                 on_select=None):
     binding_vals = {
         k: (v if isinstance(v, (int, float, bool)) else read(v))
         for k, v in m.binding.items()
     }
     ctx = ctx_factory(m)
     harness = select(m, binding_vals, ctx)
+    if on_select is not None:
+        on_select(m, harness)
     out = harness(binding_vals, ctx)
     if m.variant == "loop":
         # scan anchor: outvars = (final counter, final accumulator)

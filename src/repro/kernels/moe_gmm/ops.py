@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.moe_gmm.kernel import gmm_pallas
-from repro.kernels.moe_gmm.ref import gmm_ref, moe_ffn_ref
+from repro.kernels.moe_gmm.ref import moe_ffn_ref
 
 
 def _route(idx: jax.Array, T: int, K: int, E: int, tm: int):

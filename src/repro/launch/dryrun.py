@@ -26,7 +26,6 @@ import re           # noqa: E402
 import subprocess   # noqa: E402
 import sys          # noqa: E402
 import time         # noqa: E402
-import traceback    # noqa: E402
 
 import jax          # noqa: E402
 import numpy as np  # noqa: E402

@@ -10,8 +10,6 @@ olmo-1b to mistral-large-123b).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -21,7 +21,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,7 @@ collective-bound-regime dependent — see EXPERIMENTS.md §Perf.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -6,14 +6,12 @@ These are what the dry-run lowers: jax.jit(step, in_shardings, out_shardings)
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ShapeConfig
 from repro.models.factory import Model
 from repro.models import spec as S
 from repro.train import optim as O

@@ -1,6 +1,21 @@
 import os
 import sys
 
+import pytest
+
 # tests run on the single host device; the dry-run (and only the dry-run)
 # forces 512 placeholder devices in its own subprocess.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(autouse=True)
+def _isolated_autotune_cache(tmp_path, monkeypatch):
+    """Keep autotune persistence out of ~/.cache during tests: every test
+    gets a private cache file and a fresh tuner on the global registry."""
+    monkeypatch.setenv("LILAC_AUTOTUNE_CACHE",
+                       str(tmp_path / "autotune.json"))
+    from repro.core.harness import REGISTRY
+
+    REGISTRY.reset_autotuner()
+    yield
+    REGISTRY.reset_autotuner()

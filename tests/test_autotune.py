@@ -1,0 +1,351 @@
+"""Persistent autotuning subsystem (repro.core.autotune):
+
+  * signature bucketing is stable and shape/sparsity-aware
+  * cache round-trips through its on-disk JSON form
+  * atomic merge-on-save keeps concurrent tuners' entries
+  * entries invalidate when the harness set / registry version changes
+  * trace-mode winners are pinned deterministically into the rewrite
+  * a fresh process warm-starts from disk with ZERO candidate re-timing
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import lilac_accelerate, lilac_optimize
+from repro.core.autotune import (AutotuneCache, Autotuner, pow2_bucket,
+                                 signature_of, sparsity_bucket,
+                                 synthesize_operands)
+from repro.core.harness import REGISTRY, CallCtx, Harness, HarnessRegistry
+from repro.core.marshal import MarshalingCache
+from repro.sparse import csr_from_dense
+from repro.sparse.random import random_dense_sparse
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+# ---------------------------------------------------------------------------
+# problem helpers
+# ---------------------------------------------------------------------------
+
+def _problem(n=96, density=0.1, seed=0):
+    csr = csr_from_dense(random_dense_sparse(n, n, density, seed))
+    vec = jnp.asarray(np.random.default_rng(seed + 1)
+                      .standard_normal(n).astype(np.float32))
+    return csr, vec
+
+
+def _naive_fn(rows, nnz):
+    def naive(val, col, row_ptr, v):
+        row = jnp.repeat(jnp.arange(rows, dtype=jnp.int32),
+                         jnp.diff(row_ptr), total_repeat_length=nnz)
+        return jax.ops.segment_sum(val * v[col], row, num_segments=rows)
+    return naive
+
+
+def _toy_registry(delays):
+    """Registry with named dummy harnesses whose runtime we control."""
+    reg = HarnessRegistry()
+
+    def make(delay):
+        def fn(b, ctx):
+            time.sleep(delay)
+            return np.zeros(b["rows"], np.float32)
+        return fn
+
+    for name, delay in delays.items():
+        reg.register(Harness(name, "spmv_csr", make(delay),
+                             formats=("CSR",)))
+    reg._defaults[("spmv_csr", "cpu")] = next(iter(delays))
+    return reg
+
+
+def _toy_binding(rows=64, nnz=512, cols=64):
+    return {"a": np.ones(nnz, np.float32),
+            "colidx": np.zeros(nnz, np.int32),
+            "rowstr": np.linspace(0, nnz, rows + 1).astype(np.int32),
+            "iv": np.ones(cols, np.float32),
+            "rows": rows, "nnz": nnz}
+
+
+# ---------------------------------------------------------------------------
+# signatures
+# ---------------------------------------------------------------------------
+
+def test_buckets():
+    assert pow2_bucket(0) == 0
+    assert pow2_bucket(1) == 1
+    assert pow2_bucket(5) == 8
+    assert pow2_bucket(4096) == 4096
+    assert pow2_bucket(4097) == 8192
+    assert sparsity_bucket(0.05) == "d-2"
+    assert sparsity_bucket(1.0) == "d0"
+    assert sparsity_bucket(0.0) == "d?"
+
+
+def test_signature_buckets_similar_problems_together():
+    a = signature_of("spmv_csr", "CSR", "cpu", _toy_binding(64, 500))
+    b = signature_of("spmv_csr", "CSR", "cpu", _toy_binding(64, 512))
+    c = signature_of("spmv_csr", "CSR", "cpu", _toy_binding(128, 4096))
+    assert a == b
+    assert a != c
+    assert "spmv_csr|CSR|cpu" in a
+
+
+def test_signature_agrees_between_tracers_and_values():
+    """Trace-mode lowering (avals) and host-mode execution (arrays) must
+    compute the same key, or warm-starts would never hit."""
+    binding = _toy_binding()
+    sig_concrete = signature_of("spmv_csr", "CSR", "cpu", binding)
+    captured = {}
+
+    def probe(a, colidx, rowstr, iv):
+        captured["sig"] = signature_of(
+            "spmv_csr", "CSR", "cpu",
+            {"a": a, "colidx": colidx, "rowstr": rowstr, "iv": iv,
+             "rows": binding["rows"], "nnz": binding["nnz"]})
+        return a
+
+    jax.make_jaxpr(probe)(binding["a"], binding["colidx"],
+                          binding["rowstr"], binding["iv"])
+    assert captured["sig"] == sig_concrete
+
+
+def test_synthesize_operands_valid_indices():
+    binding = _toy_binding(rows=32, nnz=100, cols=48)
+    ops = synthesize_operands(binding)
+    assert np.asarray(ops["colidx"]).max() < 48
+    ptr = np.asarray(ops["rowstr"])
+    assert ptr[0] == 0 and ptr[-1] == 100
+    assert (np.diff(ptr) >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# cache persistence
+# ---------------------------------------------------------------------------
+
+def test_cache_roundtrip(tmp_path):
+    path = tmp_path / "autotune.json"
+    c1 = AutotuneCache(path, registry_fingerprint="fp1")
+    rec = {"harness": "jnp.ell", "best_s": 1e-4, "timings": {"jnp.ell": 1e-4}}
+    c1.put("sig-a", "host", rec)
+    assert path.exists()
+    c2 = AutotuneCache(path, registry_fingerprint="fp1").load()
+    assert c2.entries["sig-a"]["host"] == rec
+    # and the file itself is well-formed, versioned JSON
+    doc = json.loads(path.read_text())
+    assert doc["schema"] >= 1 and doc["registry"] == "fp1"
+
+
+def test_cache_atomic_under_concurrent_tuners(tmp_path):
+    """N writers with independent cache instances: the merged file must be
+    valid JSON containing every writer's entry (merge-on-save + flock)."""
+    path = tmp_path / "autotune.json"
+    n = 8
+    errors = []
+
+    def writer(i):
+        try:
+            c = AutotuneCache(path, registry_fingerprint="fp")
+            c.put(f"sig-{i}", "host", {"harness": f"h{i}", "best_s": 1.0,
+                                       "timings": {}})
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    merged = AutotuneCache(path, registry_fingerprint="fp").load()
+    assert set(merged.entries) == {f"sig-{i}" for i in range(n)}
+    json.loads(path.read_text())  # parses cleanly
+
+
+def test_cache_invalidation_on_fingerprint_change(tmp_path):
+    path = tmp_path / "autotune.json"
+    c1 = AutotuneCache(path, registry_fingerprint="fp-old")
+    c1.put("sig-a", "host", {"harness": "x", "best_s": 1.0, "timings": {}})
+    c2 = AutotuneCache(path, registry_fingerprint="fp-new").load()
+    assert c2.entries == {}
+    assert c2.stats.invalidations == 1
+
+
+def test_registry_version_bump_invalidates(tmp_path):
+    """The registry fingerprint folds in ``version``: bumping it yields a
+    fresh tuner whose warm-start drops stale winners."""
+    reg = _toy_registry({"slow": 0.01, "fast": 0.0})
+    fp0 = reg.fingerprint()
+    tuner0 = reg.autotuner
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR")
+    h = tuner0.select("spmv_csr", "CSR", "cpu", "host", cands,
+                      _toy_binding(), ctx, default_name="slow")
+    assert h.name == "fast" and tuner0.stats.timing_calls == 2
+
+    reg.version += 1
+    assert reg.fingerprint() != fp0
+    tuner1 = reg.autotuner
+    assert tuner1 is not tuner0
+    h = tuner1.select("spmv_csr", "CSR", "cpu", "host", cands,
+                      _toy_binding(), ctx, default_name="slow")
+    assert h.name == "fast"
+    # stale entry was NOT trusted: candidates were re-measured
+    assert tuner1.stats.timing_calls == 2
+    assert tuner1.stats.disk_hits == 0
+
+
+def test_budget_zero_falls_back_to_default():
+    reg = _toy_registry({"slow": 0.01, "fast": 0.0})
+    tuner = Autotuner(registry_fingerprint=reg.fingerprint(), budget=0)
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR")
+    h = tuner.select("spmv_csr", "CSR", "cpu", "host", cands,
+                     _toy_binding(), ctx, default_name="slow")
+    assert h is None                      # registry falls back to default
+    assert tuner.stats.timing_calls == 0
+    assert tuner.stats.fallbacks == 1
+
+
+def test_budget_limits_explored_candidates():
+    reg = _toy_registry({"deflt": 0.002, "b": 0.01, "c": 0.01, "d": 0.01})
+    tuner = Autotuner(registry_fingerprint=reg.fingerprint(), budget=2)
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR")
+    h = tuner.select("spmv_csr", "CSR", "cpu", "host", cands,
+                     _toy_binding(), ctx, default_name="deflt")
+    assert tuner.stats.timing_calls == 2  # top-k only
+    assert h.name == "deflt"              # default ranked first, and fastest
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: host mode, trace mode, cross-process
+# ---------------------------------------------------------------------------
+
+def test_host_autotune_persists_and_warm_starts_in_process():
+    csr, vec = _problem()
+    naive = _naive_fn(csr.rows, csr.nnz)
+    acc = lilac_accelerate(naive, policy="autotune")
+    out = acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    ref = naive(csr.val, csr.col_ind, csr.row_ptr, vec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3,
+                               rtol=1e-3)
+    tuner = REGISTRY.autotuner
+    assert tuner.stats.timing_calls > 0
+    winner = acc.last_selections[0][1]
+    assert tuner.cache.path.exists()
+
+    # a SECOND LilacFunction over the same signature: no re-timing
+    timed = tuner.stats.timing_calls
+    acc2 = lilac_accelerate(naive, policy="autotune")
+    acc2(csr.val, csr.col_ind, csr.row_ptr, vec)
+    assert acc2.last_selections[0][1] == winner
+    assert tuner.stats.timing_calls == timed
+
+
+def test_trace_mode_winner_pinning_determinism():
+    csr, vec = _problem()
+    naive = _naive_fn(csr.rows, csr.nnz)
+    opt = lilac_optimize(naive, policy="autotune")
+    out = opt(csr.val, csr.col_ind, csr.row_ptr, vec)
+    ref = naive(csr.val, csr.col_ind, csr.row_ptr, vec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3,
+                               rtol=1e-3)
+    winner = opt.last_selections[0][1]
+    entry = next(iter(opt._compiled.values()))
+    assert entry.pins == {0: winner}      # pinned into the rewrite
+
+    # repeat calls and re-traces reuse the pin: deterministic, no timing
+    tuner = REGISTRY.autotuner
+    timed = tuner.stats.timing_calls
+    for _ in range(3):
+        opt(csr.val, csr.col_ind, csr.row_ptr, vec)
+        assert opt.last_selections[0][1] == winner
+    jitted = jax.jit(lambda *a: opt(*a))
+    out = jitted(csr.val, csr.col_ind, csr.row_ptr, vec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3,
+                               rtol=1e-3)
+    assert opt.last_selections[0][1] == winner
+    assert tuner.stats.timing_calls == timed
+
+    # a fresh LilacFunction over the same signature selects the same winner
+    opt2 = lilac_optimize(naive, policy="autotune")
+    opt2(csr.val, csr.col_ind, csr.row_ptr, vec)
+    assert opt2.last_selections[0][1] == winner
+    assert tuner.stats.timing_calls == timed
+
+
+_SUBPROC = textwrap.dedent("""
+    import json, sys
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import lilac_accelerate, REGISTRY
+    from repro.sparse import csr_from_dense
+    from repro.sparse.random import random_dense_sparse
+
+    csr = csr_from_dense(random_dense_sparse(96, 96, 0.1, 0))
+    rows, nnz = csr.rows, csr.nnz
+    vec = jnp.asarray(np.random.default_rng(1)
+                      .standard_normal(96).astype(np.float32))
+
+    def naive(val, col, row_ptr, v):
+        row = jnp.repeat(jnp.arange(rows, dtype=jnp.int32),
+                         jnp.diff(row_ptr), total_repeat_length=nnz)
+        return jax.ops.segment_sum(val * v[col], row, num_segments=rows)
+
+    acc = lilac_accelerate(naive, policy="autotune")
+    acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    print(json.dumps({
+        "selected": acc.last_selections[0][1],
+        "stats": REGISTRY.autotuner.stats.as_dict(),
+    }))
+""")
+
+
+def test_autotune_persists_across_processes(tmp_path):
+    """The acceptance criterion: run the same problem in two FRESH
+    processes.  The second must read the cache file and skip candidate
+    timing entirely, selecting the identical harness."""
+    cache = tmp_path / "autotune.json"
+    env = dict(os.environ,
+               LILAC_AUTOTUNE_CACHE=str(cache),
+               PYTHONPATH=os.pathsep.join(
+                   [os.path.join(ROOT, "src"),
+                    os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))
+
+    def run_once():
+        p = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                           capture_output=True, text=True, timeout=600)
+        assert p.returncode == 0, p.stderr
+        return json.loads(p.stdout.strip().splitlines()[-1])
+
+    first = run_once()
+    assert first["stats"]["timing_calls"] > 0      # cold: measured
+    assert cache.exists()
+    mtime = cache.stat().st_mtime
+
+    second = run_once()
+    assert second["selected"] == first["selected"]  # same harness
+    assert second["stats"]["timing_calls"] == 0     # zero re-timing
+    assert second["stats"]["disk_hits"] >= 1        # cache file was read
+    assert cache.stat().st_mtime == mtime           # and not re-written
+
+
+def test_autotune_disable_env(monkeypatch):
+    monkeypatch.setenv("LILAC_AUTOTUNE_DISABLE", "1")
+    REGISTRY.reset_autotuner()
+    csr, vec = _problem()
+    naive = _naive_fn(csr.rows, csr.nnz)
+    acc = lilac_accelerate(naive, policy="autotune")
+    acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    tuner = REGISTRY.autotuner
+    assert tuner.stats.timing_calls == 0
+    assert tuner.stats.fallbacks >= 1
+    assert not tuner.cache.path.exists()

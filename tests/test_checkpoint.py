@@ -1,6 +1,5 @@
 """Checkpointing + fault tolerance: atomic commit, restart, elastic
 reshard across different mesh shapes, resumable data, stragglers."""
-import json
 import os
 import subprocess
 import sys

@@ -4,10 +4,9 @@ answers (the paper's Fig. 1 user experience)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import lilac_accelerate, lilac_optimize
-from repro.sparse import csr_from_dense, random_csr
+from repro.core import lilac_accelerate
+from repro.sparse import csr_from_dense
 from repro.sparse.random import random_graph_csr
 
 
