@@ -104,8 +104,8 @@ def run(reps: int = 3) -> dict:
             base = jax.jit(naive)
             t_naive = timeit(lambda: app(base, args), reps=reps, warmup=1)
             # the paper's model: insertion at compile time (jit'd rewrite)
-            from repro.core import lilac_optimize
-            opt = lilac_optimize(naive)
+            from repro import lilac
+            opt = lilac.compile(naive)
             acc = jax.jit(lambda *a: opt(*a))
             t_lilac = timeit(lambda: app(acc, args), reps=reps, warmup=1)
             speedups.append(t_naive / t_lilac)

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, naive_spmv_fn, problem_suite, timeit, vec_for
-from repro.core import lilac_accelerate, what_lang
+from repro import lilac
+from repro.core import what_lang
 from repro.sparse import ell_from_csr
 
 
@@ -27,8 +28,6 @@ def lilac_loc() -> int:
 
 
 def run(reps: int = 10) -> dict:
-    from repro.core import lilac_optimize
-
     suite = problem_suite()
     out = {}
     for prob_name in ("erdos_4k", "banded_8k", "dense_block_2k"):
@@ -49,13 +48,13 @@ def run(reps: int = 10) -> dict:
 
         # LiLAC compiled path — the paper's model: insertion happens at
         # compile time, zero per-call overhead
-        opt = lilac_optimize(naive)
+        opt = lilac.compile(naive)
         opt_jit = jax.jit(lambda *a: opt(*a))
         t_jit = timeit(opt_jit, csr.val, csr.col_ind, csr.row_ptr, vec,
                        reps=reps)
         # LiLAC runtime-harness path (host mode + marshaling cache):
         # per-call Python overhead, amortizes on large problems
-        acc_fn = lilac_accelerate(naive, policy="jnp.ell")
+        acc_fn = lilac.compile(naive, mode="host", policy="jnp.ell")
         t_host = timeit(acc_fn, csr.val, csr.col_ind, csr.row_ptr, vec,
                         reps=reps)
         frac_jit = t_expert / t_jit

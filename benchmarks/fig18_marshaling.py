@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, naive_spmv_fn, problem_suite, timeit, vec_for
-from repro.core import lilac_accelerate
+from repro import lilac
 
 
 def run(reps: int = 5, iters: int = 10) -> dict:
@@ -31,7 +31,7 @@ def run(reps: int = 5, iters: int = 10) -> dict:
             return x
 
         for backend in ("jnp.ell", "jnp.bcsr"):
-            acc = lilac_accelerate(naive, policy=backend)
+            acc = lilac.compile(naive, mode="host", policy=backend)
             t_marshal = timeit(lambda: iterate(acc), reps=reps, warmup=1)
             t_naive_m = timeit(lambda: iterate(acc, clear=True),
                                reps=reps, warmup=1)

@@ -4,9 +4,9 @@ harness registry supports per-platform selection and autotuning).
 
 This sweep doubles as the autotuner's external measurement pass: the
 steady-state timings it collects are recorded into the persistent autotune
-cache (``repro.core.autotune``), so a later ``lilac_accelerate(fn,
-policy="autotune")`` in ANY process warm-starts from the sweep instead of
-re-timing.  The JSON report compares the tuned selection against the static
+cache (``repro.core.autotune``), so a later ``lilac.compile(fn,
+mode="host", policy="autotune")`` in ANY process warm-starts from the
+sweep instead of re-timing.  The JSON report compares the tuned selection against the static
 per-platform default on every (problem, context) cell; because the tuned
 pick is the argmin of the same measurements, it is never slower than the
 default in the report — the Table 2 "always pick the right backend" win.
@@ -27,7 +27,8 @@ import jax
 
 from benchmarks.common import (emit, naive_spmv_fn, problem_suite, timeit,
                                vec_for, write_json_report)
-from repro.core import REGISTRY, lilac_accelerate, signature_of
+from repro import lilac
+from repro.core import REGISTRY, signature_of
 
 BACKENDS = ["jnp.segment", "jnp.ell", "jnp.bcsr", "jnp.dense"]
 
@@ -75,7 +76,7 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
             # already-measured steady result, or the report's winner and the
             # autotune-cache seed would disagree about the candidate set.
             try:
-                acc = lilac_accelerate(naive, policy=backend)
+                acc = lilac.compile(naive, mode="host", policy=backend)
                 t = timeit(acc, csr.val, csr.col_ind, csr.row_ptr, vec,
                            reps=reps)
                 row[(backend, "steady")] = t_naive / t
@@ -144,7 +145,7 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
     # End-to-end proof that the cache is live: a fresh autotune-policy pass
     # over the last problem must select from the cache without re-timing.
     timing_before = tuner.stats.timing_calls
-    acc = lilac_accelerate(naive, policy="autotune")
+    acc = lilac.compile(naive, mode="host", policy="autotune")
     acc(csr.val, csr.col_ind, csr.row_ptr, vec)
     report["warm_start"] = {
         "selected": acc.last_selections[0][1] if acc.last_selections else None,

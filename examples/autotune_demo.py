@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import REGISTRY, lilac_accelerate, lilac_optimize
+from repro import lilac
+from repro.core import REGISTRY
 from repro.core.autotune import default_cache_path
 from repro.sparse.random import random_graph_csr
 
@@ -57,7 +58,7 @@ def main():
     print(f"autotune cache: {tuner.cache.path} "
           f"({'exists' if tuner.cache.path.exists() else 'cold'})")
 
-    spmv = lilac_accelerate(naive, policy="autotune")
+    spmv = lilac.compile(naive, mode="host", policy="autotune")
     t0 = time.perf_counter()
     out = spmv(csr.val, csr.col_ind, csr.row_ptr, vec)
     jax.block_until_ready(out)
@@ -80,7 +81,7 @@ def main():
     print(f"steady state: {steady * 1e6:.0f} us/call over {args.calls} calls")
 
     if args.trace:
-        opt = lilac_optimize(naive, policy="autotune")
+        opt = lilac.compile(naive, policy="autotune")
         jopt = jax.jit(lambda *a: opt(*a))
         out = jopt(csr.val, csr.col_ind, csr.row_ptr, vec)
         jax.block_until_ready(out)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lilac_accelerate
+from repro import lilac
 from repro.sparse.random import random_graph_csr
 
 
@@ -45,7 +45,7 @@ def main():
     jax.block_until_ready(v0)
     t_naive = time.perf_counter() - t0
 
-    spmv = lilac_accelerate(naive, policy=args.policy)
+    spmv = lilac.compile(naive, mode="host", policy=args.policy)
     jax.block_until_ready(bfs(spmv))
     t0 = time.perf_counter()
     v1 = bfs(spmv)

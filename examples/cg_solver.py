@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lilac_accelerate
+from repro import lilac
 from repro.sparse import csr_from_dense
 from repro.sparse.random import random_dense_sparse
 
@@ -57,7 +57,7 @@ def main():
         return jax.ops.segment_sum(val * v[col], row, num_segments=args.n)
 
     for name, fn in [("naive (-O2 baseline)", jax.jit(naive)),
-                     ("lilac", lilac_accelerate(naive, policy=args.policy))]:
+                     ("lilac", lilac.compile(naive, mode="host", policy=args.policy))]:
         t0 = time.perf_counter()
         x, k = cg(fn, csr, b, iters=args.iters)
         jax.block_until_ready(x)

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lilac_accelerate
+from repro import lilac
 from repro.sparse.random import random_graph_csr
 
 
@@ -42,7 +42,7 @@ def main():
     jax.block_until_ready(x0)
     t_naive = time.perf_counter() - t0
 
-    spmv = lilac_accelerate(naive, policy=args.policy)
+    spmv = lilac.compile(naive, mode="host", policy=args.policy)
     jax.block_until_ready(pagerank(spmv))   # warm (includes the one repack)
     t0 = time.perf_counter()
     x1 = pagerank(spmv)

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lilac_accelerate, what_lang
+from repro import lilac
+from repro.core import what_lang
 from repro.sparse import random_csr
 
 ROWS, COLS = 4096, 4096
@@ -38,7 +39,7 @@ def main():
                       .astype(np.float32))
 
     # detection + rewrite (host mode with marshaling cache)
-    spmv = lilac_accelerate(application_spmv, policy="jnp.bcsr")
+    spmv = lilac.compile(application_spmv, mode="host", policy="jnp.bcsr")
     out = spmv(csr.val, csr.col_ind, csr.row_ptr, vec)
     print("detection:", spmv.last_report.summary())
     ref = application_spmv(csr.val, csr.col_ind, csr.row_ptr, vec)

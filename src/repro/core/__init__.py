@@ -1,24 +1,35 @@
 """repro.core — LiLAC: the paper's contribution as a composable JAX module.
 
-Public API:
-    lilac_optimize(fn)    trace-mode rewritten function (jit-compatible)
-    lilac_accelerate(fn)  host-mode with marshaling cache (solver apps)
-    Detector              backtracking jaxpr detection
-    REGISTRY / Harness    LiLAC-How backends
-    MarshalingCache       mprotect-analogue invariant caching
-    what_lang             the LiLAC-What language (Fig. 3)
+Public API (prefer the ``repro.lilac`` facade):
+    compile / CompileOptions   the single LiLAC entry point
+    spec                       HARNESS-descriptor compiler + @harness
+    Detector                   backtracking jaxpr detection
+    REGISTRY / Harness         LiLAC-How backends (populated from specs)
+    MarshalingCache            mprotect-analogue invariant caching
+    what_lang                  the LiLAC spec language (Fig. 3 + §3.3)
+    lilac_optimize/accelerate  deprecated shims over compile
 """
 from repro.core.autotune import Autotuner, AutotuneCache, signature_of
 from repro.core.detect import Detector, DetectionReport, Match, default_detector
-from repro.core.harness import REGISTRY, CallCtx, Harness, HarnessRegistry
+from repro.core.harness import (REGISTRY, CallCtx, DuplicateHarnessError,
+                                Harness, HarnessRegistry)
 from repro.core.marshal import MarshalingCache, ReadObject, TrackedArray, fingerprint
-from repro.core.pass_manager import LilacFunction, lilac_accelerate, lilac_optimize
+from repro.core.pass_manager import (CompileOptions, LilacDeprecationWarning,
+                                     LilacFunction, compile, lilac_accelerate,
+                                     lilac_optimize)
+from repro.core import spec
 from repro.core import what_lang
+
+# Populate REGISTRY from the builtin spec texts (jnp.* families) and the
+# HARNESS blocks declared next to the Pallas kernels.
+spec.register_builtins()
 
 __all__ = [
     "Autotuner", "AutotuneCache", "signature_of",
     "Detector", "DetectionReport", "Match", "default_detector",
-    "REGISTRY", "CallCtx", "Harness", "HarnessRegistry",
+    "REGISTRY", "CallCtx", "DuplicateHarnessError", "Harness",
+    "HarnessRegistry",
     "MarshalingCache", "ReadObject", "TrackedArray", "fingerprint",
-    "LilacFunction", "lilac_accelerate", "lilac_optimize", "what_lang",
+    "CompileOptions", "LilacDeprecationWarning", "LilacFunction", "compile",
+    "lilac_accelerate", "lilac_optimize", "spec", "what_lang",
 ]

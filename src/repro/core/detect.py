@@ -232,9 +232,12 @@ class Ctx:
                 vals.append(self.constvar_vals[lf])
             else:
                 raise KeyError(f"no value for leaf {lf}")
+        # The parent's debug_info describes the parent's arity; newer jax
+        # asserts arg_names/result_paths lengths match, so the sub-jaxpr
+        # must drop it entirely.
         sub = jex_core.Jaxpr(
             constvars=(), invars=list(leaves), outvars=[out_atom], eqns=eqns,
-            debug_info=self.jaxpr.debug_info,
+            debug_info=None,
         )
         (out,) = jcore.eval_jaxpr(sub, [], *vals)
         return np.asarray(out)
@@ -1001,11 +1004,26 @@ _DEFAULT_PRIORITY = ["moe_ffn", "spmm_csr", "spmv_csr", "spmv_jds",
 
 class Detector:
     def __init__(self, computations: Optional[Sequence[W.Computation]] = None):
-        comps = list(computations) if computations is not None else [
-            W.BUILTINS[n] for n in _DEFAULT_PRIORITY if n in W.BUILTINS]
+        if computations is not None:
+            comps = list(computations)
+            lenient = False
+        else:
+            # priority order first, then any spec-registered extras
+            names = [n for n in _DEFAULT_PRIORITY if n in W.BUILTINS]
+            names += [n for n in W.BUILTINS if n not in names]
+            comps = [W.BUILTINS[n] for n in names]
+            lenient = True
         self.matchers: List[Matcher] = []
+        self.unmatchable: List[str] = []
         for c in comps:
-            self.matchers.extend(generate_matcher(c))
+            try:
+                self.matchers.extend(generate_matcher(c))
+            except NotImplementedError:
+                # a spec-registered computation with no matcher skeleton
+                # must not break detection of everything else
+                if not lenient:
+                    raise
+                self.unmatchable.append(c.name)
 
     def detect(self, closed_jaxpr, normalize: bool = True) -> DetectionReport:
         cj = normalize_closed_jaxpr(closed_jaxpr) if normalize else closed_jaxpr
@@ -1043,3 +1061,10 @@ def default_detector() -> Detector:
     if _default_detector is None:
         _default_detector = Detector()
     return _default_detector
+
+
+def reset_default_detector() -> None:
+    """Drop the cached detector so newly spec-registered computations are
+    picked up by the next ``default_detector()`` call."""
+    global _default_detector
+    _default_detector = None

@@ -1,11 +1,21 @@
 """LiLAC-How harnesses: how detected computations are executed (paper §3.3).
 
-A ``Harness`` is the analogue of the paper's HARNESS block: a named
+A ``Harness`` is the executable form of a spec's HARNESS block: a named
 implementation of one What-computation, with marshaling, persistence and
 platform constraints.  Multiple harnesses per computation reproduce the
 paper's central observation (Table 2): no backend wins everywhere, so the
 registry supports per-platform defaults, explicit pinning and an autotune
 policy (the SparseX analogue).
+
+This module holds the *mechanism* (Harness, HarnessRegistry, the global
+REGISTRY) and the builtin jnp.* kernel bodies.  The *policy* — which
+harness exists, its formats/platforms, and its marshaled inputs — lives in
+the spec texts (``what_lang.BUILTIN_SPECS`` plus the HARNESS blocks
+declared next to the Pallas kernels under ``repro/kernels/``); the spec
+compiler (``repro.core.spec``) populates REGISTRY from them at import time
+of ``repro.core``.  Kernel bodies receive marshaled inputs as keyword
+arguments generated from the declared repack clauses instead of
+open-coding the cache lookups.
 
 Backends provided out of the box:
 
@@ -35,6 +45,10 @@ from repro.core.marshal import MarshalingCache
 Binding = Dict[str, Any]
 
 
+class DuplicateHarnessError(ValueError):
+    """A harness with the same (implements, name) is already registered."""
+
+
 @dataclasses.dataclass
 class CallCtx:
     mode: str                      # 'trace' | 'host'
@@ -54,18 +68,33 @@ class Harness:
     persistent: Dict[str, Any] = dataclasses.field(default_factory=dict)
     setup: Optional[Callable] = None              # BeforeFirstExecution
     teardown: Optional[Callable] = None           # AfterLastExecution
+    # Shared mutable {"up": bool} when one HARNESS block implements several
+    # computations: the sibling Harness objects are ONE backend, so setup
+    # runs once on the first call through any of them, release through any
+    # of them tears down for all, and a later call sets up again.
+    lifecycle: Optional[Dict[str, bool]] = None
     _setup_done: bool = False
 
+    def _is_up(self) -> bool:
+        if self.lifecycle is not None:
+            return self.lifecycle["up"]
+        return self._setup_done
+
+    def _mark(self, up: bool):
+        if self.lifecycle is not None:
+            self.lifecycle["up"] = up
+        self._setup_done = up
+
     def __call__(self, binding: Binding, ctx: CallCtx):
-        if not self._setup_done and self.setup is not None:
+        if not self._is_up() and self.setup is not None:
             self.setup(self.persistent)
-            self._setup_done = True
+            self._mark(True)
         return self.fn(binding, ctx)
 
     def release(self):
-        if self._setup_done and self.teardown is not None:
+        if self._is_up() and self.teardown is not None:
             self.teardown(self.persistent)
-            self._setup_done = False
+            self._mark(False)
 
 
 class HarnessRegistry:
@@ -75,8 +104,24 @@ class HarnessRegistry:
         self.version = version        # bump to invalidate persisted tunings
         self._autotuner = None
 
-    def register(self, h: Harness, default_for: Tuple[str, ...] = ()):
-        self._by_comp.setdefault(h.implements, []).append(h)
+    def register(self, h: Harness, default_for: Tuple[str, ...] = (),
+                 override: bool = False):
+        """Register a harness.  Re-registering the same ``(implements,
+        name)`` is an error unless ``override=True``, which replaces the
+        existing harness in place (same candidate-order slot) — the escape
+        hatch that makes spec re-loading safe."""
+        hs = self._by_comp.setdefault(h.implements, [])
+        for i, existing in enumerate(hs):
+            if existing.name == h.name:
+                if not override:
+                    raise DuplicateHarnessError(
+                        f"harness {h.name!r} is already registered for "
+                        f"{h.implements!r}; pass override=True to replace it")
+                existing.release()   # run AfterLastExecution before dropping
+                hs[i] = h
+                break
+        else:
+            hs.append(h)
         for plat in default_for:
             self._defaults[(h.implements, plat)] = h.name
         self._autotuner = None        # harness set changed -> new fingerprint
@@ -169,7 +214,9 @@ REGISTRY = HarnessRegistry()
 
 
 # ---------------------------------------------------------------------------
-# Builtin harness implementations
+# Builtin jnp.* kernel bodies.  Marshaled inputs (ell/bcsr/dense keyword
+# args) are produced by the repack clauses declared in the spec texts and
+# injected by the generated wrapper (repro.core.spec.build_harnesses).
 # ---------------------------------------------------------------------------
 
 def _row_ids(binding: Binding) -> jax.Array:
@@ -196,17 +243,9 @@ def _ell_spmv_jit(val, col, perm, vec):
     return out.at[perm].set(acc)
 
 
-def _spmv_ell_host(b: Binding, ctx: CallCtx):
-    """Marshaled CSR/COO -> ELL repack (host mode): the repack is the
+def _spmv_ell_host(b: Binding, ctx: CallCtx, *, ell):
+    """CSR/COO match with a marshaled ELL repack: the repack is the
     'transfer' that the cache amortizes across calls (paper Fig. 18)."""
-    from repro.sparse.convert import csr_to_ell
-
-    def pack():
-        csr = _binding_to_csr(b)
-        return csr_to_ell(csr)
-
-    keys = (b["a"], b["colidx"], b.get("rowstr", b.get("rowidx")))
-    ell = ctx.cache.get("ell_pack", keys, pack)
     return _ell_spmv_jit(ell.val, ell.col, ell.perm, b["iv"])
 
 
@@ -228,15 +267,9 @@ def _binding_to_csr(b: Binding):
                row_ptr=jnp.asarray(row_ptr), shape=(b["rows"], cols))
 
 
-def _spmv_bcsr_host(b: Binding, ctx: CallCtx):
-    from repro.sparse.convert import csr_to_bcsr
+def _spmv_bcsr_host(b: Binding, ctx: CallCtx, *, bcsr):
     from repro.sparse.ops import bcsr_spmm_ref
 
-    def pack():
-        return csr_to_bcsr(_binding_to_csr(b), block_shape=(8, 128))
-
-    keys = (b["a"], b["colidx"], b.get("rowstr", b.get("rowidx")))
-    bcsr = ctx.cache.get("bcsr_pack", keys, pack)
     vec = b["iv"]
     pad = bcsr.shape[1] - vec.shape[0]
     if pad > 0:
@@ -245,12 +278,7 @@ def _spmv_bcsr_host(b: Binding, ctx: CallCtx):
     return out[: b["rows"]]
 
 
-def _spmv_dense_host(b: Binding, ctx: CallCtx):
-    def pack():
-        return _binding_to_csr(b).todense()
-
-    keys = (b["a"], b["colidx"], b.get("rowstr", b.get("rowidx")))
-    dense = ctx.cache.get("densify", keys, pack)
+def _spmv_dense_host(b: Binding, ctx: CallCtx, *, dense):
     return dense @ b["iv"]
 
 
@@ -264,94 +292,22 @@ def _spmv_ell_direct(b: Binding, ctx: CallCtx):
     return out.at[perm].set(acc)
 
 
-def _spmv_ell_pallas(b: Binding, ctx: CallCtx):
-    from repro.kernels.spmv_ell import ops as ell_ops
-    perm = b.get("perm")
-    interpret = ctx.platform != "tpu"
-    acc = ell_ops.spmv_ell(b["val"], b["col_ind"], b["vector"],
-                           interpret=interpret)
-    if perm is None:
-        return acc
-    out = jnp.zeros((b["rows"],), acc.dtype)
-    return out.at[perm].set(acc)
-
-
-def _spmv_ell_pallas_host(b: Binding, ctx: CallCtx):
-    """CSR/COO match -> marshaled ELL repack -> Pallas slab kernel."""
-    from repro.kernels.spmv_ell import ops as ell_ops
-    from repro.sparse.convert import csr_to_ell
-
-    def pack():
-        return csr_to_ell(_binding_to_csr(b), lane=128)
-
-    keys = (b["a"], b["colidx"], b.get("rowstr", b.get("rowidx")))
-    ell = ctx.cache.get("ell_pack128", keys, pack)
-    interpret = ctx.platform != "tpu"
-    acc = ell_ops.spmv_ell(ell.val, ell.col, b["iv"], interpret=interpret)
-    out = jnp.zeros((b["rows"],), acc.dtype)
-    return out.at[ell.perm].set(acc)
-
-
-def _spmv_bcsr_pallas_host(b: Binding, ctx: CallCtx):
-    from repro.kernels.bsr_spmm import ops as bsr_ops
-    from repro.sparse.convert import csr_to_bcsr
-
-    def pack():
-        return csr_to_bcsr(_binding_to_csr(b), block_shape=(128, 128))
-
-    keys = (b["a"], b["colidx"], b.get("rowstr", b.get("rowidx")))
-    bcsr = ctx.cache.get("bcsr_pack128", keys, pack)
-    vec = b["iv"]
-    pad = bcsr.shape[1] - vec.shape[0]
-    if pad > 0:
-        vec = jnp.pad(vec, (0, pad))
-    interpret = ctx.platform != "tpu"
-    out = bsr_ops.bsr_spmm(bcsr, jnp.tile(vec[:, None], (1, 128)),
-                           interpret=interpret)[:, 0]
-    return out[: b["rows"]]
-
-
 def _spmm_segment(b: Binding, ctx: CallCtx):
     """CSR/COO x dense-matrix via segment-sum (trace-safe)."""
     prod = b["a"][:, None] * b["dense"][b["colidx"]]
     return jax.ops.segment_sum(prod, _row_ids(b), num_segments=b["rows"])
 
 
-def _spmm_bcsr_host(b: Binding, ctx: CallCtx):
+def _spmm_bcsr_host(b: Binding, ctx: CallCtx, *, bcsr):
     """Marshaled CSR->BCSR repack + block SpMM (cuSPARSE csrmm analogue;
     on TPU this is the bsr_spmm Pallas kernel's home case)."""
-    from repro.sparse.convert import csr_to_bcsr
     from repro.sparse.ops import bcsr_spmm_ref
 
-    def pack():
-        csr = _binding_to_csr_spmm(b)
-        return csr_to_bcsr(csr, block_shape=(8, 128))
-
-    keys = (b["a"], b["colidx"], b.get("rowstr", b.get("rowidx")))
-    bcsr = ctx.cache.get("bcsr_pack_mm", keys, pack)
     dense = b["dense"]
     pad = bcsr.shape[1] - dense.shape[0]
     if pad > 0:
         dense = jnp.pad(dense, ((0, pad), (0, 0)))
     return bcsr_spmm_ref(bcsr, dense)[: b["rows"]]
-
-
-def _spmm_bcsr_pallas_host(b: Binding, ctx: CallCtx):
-    from repro.kernels.bsr_spmm import ops as bsr_ops
-    from repro.sparse.convert import csr_to_bcsr
-
-    def pack():
-        return csr_to_bcsr(_binding_to_csr_spmm(b), block_shape=(128, 128))
-
-    keys = (b["a"], b["colidx"], b.get("rowstr", b.get("rowidx")))
-    bcsr = ctx.cache.get("bcsr_pack_mm128", keys, pack)
-    dense = b["dense"]
-    pad = bcsr.shape[1] - dense.shape[0]
-    if pad > 0:
-        dense = jnp.pad(dense, ((0, pad), (0, 0)))
-    interpret = ctx.platform != "tpu"
-    out = bsr_ops.bsr_spmm(bcsr, dense, interpret=interpret)
-    return out[: b["rows"]]
 
 
 def _binding_to_csr_spmm(b: Binding):
@@ -405,14 +361,6 @@ def _moe_capacity(b: Binding, ctx: CallCtx, capacity_factor: float = 2.0):
     return out.astype(x.dtype)
 
 
-def _moe_gmm_pallas(b: Binding, ctx: CallCtx):
-    from repro.kernels.moe_gmm import ops as gmm_ops
-    interpret = ctx.platform != "tpu"
-    return gmm_ops.moe_ffn(b["x"], b["gate"], b["idx"],
-                           b["wg"], b["wu"], b["wd"],
-                           interpret=interpret)
-
-
 def _moe_dense(b: Binding, ctx: CallCtx):
     """The naive formulation itself — the paper's '-O2 baseline' harness."""
     x, gate, idx = b["x"], b["gate"], b["idx"]
@@ -425,53 +373,19 @@ def _moe_dense(b: Binding, ctx: CallCtx):
     return jnp.einsum("te,etd->td", combine, y)
 
 
-def _register_builtins(reg: HarnessRegistry):
-    # SpMV over flat (CSR/COO) matches
-    for comp in ("spmv_csr", "spmv_coo"):
-        reg.register(Harness("jnp.segment", comp, _spmv_segment,
-                             formats=("CSR", "COO")),
-                     default_for=("cpu", "tpu"))
-        reg.register(Harness("jnp.ell", comp, _spmv_ell_host, jit_safe=False,
-                             formats=("CSR", "COO")))
-        reg.register(Harness("jnp.bcsr", comp, _spmv_bcsr_host, jit_safe=False,
-                             formats=("CSR", "COO")))
-        reg.register(Harness("jnp.dense", comp, _spmv_dense_host, jit_safe=False,
-                             formats=("CSR", "COO")))
-        # pallas harnesses are TPU-targeted: on CPU they run the kernel
-        # interpreter (correctness only, far too slow for autotune); they
-        # stay selectable by explicit policy name.
-        reg.register(Harness("pallas.ell", comp, _spmv_ell_pallas_host,
-                             jit_safe=False, formats=("CSR", "COO"),
-                             platforms=("tpu",)))
-        reg.register(Harness("pallas.bcsr", comp, _spmv_bcsr_pallas_host,
-                             jit_safe=False, formats=("CSR", "COO"),
-                             platforms=("tpu",)))
-    # SpMV over padded (ELL/JDS) matches
-    for comp in ("spmv_ell", "spmv_jds"):
-        reg.register(Harness("jnp.ell", comp, _spmv_ell_direct,
-                             formats=("ELL", "JDS")),
-                     default_for=("cpu",))
-        reg.register(Harness("pallas.ell", comp, _spmv_ell_pallas,
-                             formats=("ELL", "JDS")),
-                     default_for=("tpu",))
-    reg.register(Harness("jnp.segment", "spmm_csr", _spmm_segment,
-                         formats=("CSR", "COO")),
-                 default_for=("cpu",))
-    reg.register(Harness("jnp.bcsr", "spmm_csr", _spmm_bcsr_host,
-                         jit_safe=False, formats=("CSR", "COO")))
-    reg.register(Harness("pallas.bcsr", "spmm_csr", _spmm_bcsr_pallas_host,
-                         jit_safe=False, formats=("CSR", "COO"),
-                         platforms=("tpu",)),
-                 default_for=("tpu",))
-    reg.register(Harness("jnp.dot", "dotproduct", _dot_jnp),
-                 default_for=("cpu", "tpu"))
-    reg.register(Harness("jnp.dot", "gemv", _gemv_jnp),
-                 default_for=("cpu", "tpu"))
-    reg.register(Harness("jnp.capacity", "moe_ffn", _moe_capacity),
-                 default_for=("cpu",))
-    reg.register(Harness("pallas.gmm", "moe_ffn", _moe_gmm_pallas),
-                 default_for=("tpu",))
-    reg.register(Harness("dense", "moe_ffn", _moe_dense))
-
-
-_register_builtins(REGISTRY)
+# Kernel bodies for the builtin spec texts, keyed by spec family then by
+# harness name (repro.core.spec.register_builtins consumes this).
+BUILTIN_BODIES: Dict[str, Dict[str, Callable]] = {
+    "spmv": {
+        "jnp.segment": _spmv_segment,
+        "jnp.ell": _spmv_ell_host,
+        "jnp.bcsr": _spmv_bcsr_host,
+        "jnp.dense": _spmv_dense_host,
+    },
+    "spmv_padded": {"jnp.ell": _spmv_ell_direct},
+    "spmm": {"jnp.segment": _spmm_segment, "jnp.bcsr": _spmm_bcsr_host},
+    "dotproduct": {"jnp.dot": _dot_jnp},
+    "gemv": {"jnp.dot": _gemv_jnp},
+    "moe_ffn": {"jnp.capacity": _moe_capacity},
+    "moe_ffn_baseline": {"dense": _moe_dense},
+}

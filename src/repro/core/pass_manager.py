@@ -1,22 +1,32 @@
 """The user-facing LiLAC pass (the paper's Fig. 1 compiler flow).
 
-``lilac_optimize(fn)``  — trace-mode: returns a function with the same
-    signature whose jaxpr has detected computations replaced by jit-safe
-    harnesses.  Wrap it in ``jax.jit`` exactly like the original; this is
-    how the LM framework consumes LiLAC (MoE layers etc.).
+``compile(fn, mode=...)`` is the single entry point (exposed as
+``repro.lilac.compile``); an optional :class:`CompileOptions` dataclass
+carries the full configuration.
 
-``lilac_accelerate(fn)`` — host-mode: the paper's runtime model.  Each call
-    executes the rewritten program eagerly; harnesses may be host-only and
-    use the marshaling cache, so format repacks / derived invariants are
-    amortized across calls exactly like the paper's mprotect machinery
-    (Fig. 18).  Use for solver-style apps that call the step repeatedly.
+``mode="trace"`` — returns a function with the same signature whose jaxpr
+    has detected computations replaced by jit-safe harnesses.  Wrap it in
+    ``jax.jit`` exactly like the original; this is how the LM framework
+    consumes LiLAC (MoE layers etc.).
+
+``mode="host"`` — the paper's runtime model.  Each call executes the
+    rewritten program eagerly; harnesses may be host-only and use the
+    marshaling cache, so format repacks / derived invariants are amortized
+    across calls exactly like the paper's mprotect machinery (Fig. 18).
+    Use for solver-style apps that call the step repeatedly.
 
 Both share: trace -> normalize -> detect (backtracking) -> rewrite.
 Detection runs once per input-shape signature and is cached.
+
+``lilac_optimize`` / ``lilac_accelerate`` are deprecation shims over
+``compile`` kept for out-of-repo callers; they warn with
+:class:`LilacDeprecationWarning`, which the test suite escalates to an
+error so in-repo code stays on the new surface.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -143,19 +153,73 @@ class LilacFunction:
         return jax.tree_util.tree_unflatten(entry.out_tree, outs)
 
 
-def lilac_optimize(fn: Callable, *, policy: str = "default",
-                   registry=None, detector=None, platform=None,
-                   enabled: bool = True) -> LilacFunction:
-    """Trace-mode LiLAC pass: jit-compatible rewritten function."""
-    return LilacFunction(fn, mode="trace", policy=policy, registry=registry,
-                         detector=detector, platform=platform, enabled=enabled)
+class LilacDeprecationWarning(DeprecationWarning):
+    """Emitted by the pre-``lilac.compile`` entry-point shims."""
 
 
-def lilac_accelerate(fn: Callable, *, policy: str = "default",
-                     registry=None, detector=None, platform=None,
-                     cache: Optional[MarshalingCache] = None,
-                     enabled: bool = True) -> LilacFunction:
-    """Host-mode LiLAC pass: eager execution with marshaling cache."""
-    return LilacFunction(fn, mode="host", policy=policy, registry=registry,
-                         detector=detector, platform=platform, cache=cache,
-                         enabled=enabled)
+@dataclasses.dataclass
+class CompileOptions:
+    """Configuration for :func:`compile` (the paper's Fig. 1 pass).
+
+    ``mode``      'trace' (jit-compatible rewrite) or 'host' (eager with
+                  marshaling cache — the paper's runtime model).
+    ``policy``    'default' | 'autotune' | an explicit harness name.
+    ``platform``  target platform; None = ``jax.default_backend()``.
+    ``enabled``   False runs the original computation (A/B baseline).
+    ``registry``/``detector``/``cache``  dependency injection for tests
+                  and benchmarks; None picks the global instances.
+    """
+    mode: str = "trace"
+    policy: str = "default"
+    platform: Optional[str] = None
+    enabled: bool = True
+    registry: Optional[H.HarnessRegistry] = None
+    detector: Optional[D.Detector] = None
+    cache: Optional[MarshalingCache] = None
+
+
+_OPTION_FIELDS = {f.name for f in dataclasses.fields(CompileOptions)}
+
+
+def compile(fn: Optional[Callable] = None, *,
+            options: Optional[CompileOptions] = None,
+            **overrides) -> LilacFunction:
+    """The single LiLAC entry point: pass a function through the pass.
+
+    Usable directly (``lilac.compile(fn, mode="host")``), with an options
+    dataclass (``lilac.compile(fn, options=CompileOptions(...))``; explicit
+    keyword arguments override option fields), or as a decorator
+    (``@lilac.compile(policy="autotune")``).
+    """
+    bad = set(overrides) - _OPTION_FIELDS
+    if bad:
+        raise TypeError(f"unknown compile option(s): {sorted(bad)}")
+    opts = options if options is not None else CompileOptions()
+    if overrides:
+        opts = dataclasses.replace(opts, **overrides)
+    if fn is None:
+        return lambda f: compile(f, options=opts)
+    if opts.mode not in ("trace", "host"):
+        raise ValueError(f"mode must be 'trace' or 'host', got {opts.mode!r}")
+    return LilacFunction(fn, mode=opts.mode, policy=opts.policy,
+                         registry=opts.registry, detector=opts.detector,
+                         platform=opts.platform, cache=opts.cache,
+                         enabled=opts.enabled)
+
+
+def lilac_optimize(fn: Callable, **kw) -> LilacFunction:
+    """Deprecated: use ``repro.lilac.compile(fn, mode='trace', ...)``."""
+    warnings.warn(
+        "lilac_optimize() is deprecated; use "
+        "repro.lilac.compile(fn, mode='trace', ...)",
+        LilacDeprecationWarning, stacklevel=2)
+    return compile(fn, mode="trace", **kw)
+
+
+def lilac_accelerate(fn: Callable, **kw) -> LilacFunction:
+    """Deprecated: use ``repro.lilac.compile(fn, mode='host', ...)``."""
+    warnings.warn(
+        "lilac_accelerate() is deprecated; use "
+        "repro.lilac.compile(fn, mode='host', ...)",
+        LilacDeprecationWarning, stacklevel=2)
+    return compile(fn, mode="host", **kw)

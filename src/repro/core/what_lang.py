@@ -1,6 +1,7 @@
-"""LiLAC-What: the paper's specification language (Fig. 3 grammar).
+"""LiLAC: the paper's specification language (Fig. 3 grammar + §3.3).
 
-    program ::= COMPUTATION <name> <body>
+    spec    ::= { <computation> | <harness> }
+    computation ::= COMPUTATION <name> <body>
     body    ::= <forall> | <stmt>
     range   ::= ( <exp> <= <name> < <exp> )
     forall  ::= forall <range> { <body> }
@@ -8,22 +9,43 @@
     addr    ::= <name> { [ <exp> ] }
     exp     ::= <name> | <cnst> | <addr> | <exp> + <exp> | <exp> * <exp>
 
-This module provides a tokenizer, a recursive-descent parser producing the
-AST below, and the builtin What-programs used throughout the system (the
-paper's Fig. 2 spmv_csr, Fig. 5 spmv_jds, Fig. 11 dotproduct, plus the
-LM-framework computations).  The detection pass (`repro.core.detect`)
-*generates* jaxpr matchers from these ASTs, the analogue of the paper
-generating LLVM detection functions at LLVM build time.
+    harness ::= HARNESS <name> implements <namelist> { <clause> }
+    clause  ::= platforms <namelist> ;
+              | formats <namelist> ;
+              | default_for <namelist> ;
+              | host_only ;
+              | marshal <name> = <name> ( <keylist> ) ;
+              | persistent <namelist> ;
+              | BeforeFirstExecution <name> ;
+              | AfterLastExecution <name> ;
+    namelist ::= <name> { , <name> }
+    keylist ::= <key> { , <key> }
+    key     ::= <name> { | <name> }          -- alternatives, first present wins
+
+A *spec* is the paper's one-off LiLAC description: the What-clause (the
+COMPUTATION programs — Fig. 2 spmv_csr, Fig. 5 spmv_jds, Fig. 11
+dotproduct, plus the LM-framework computations) and the How-clause (the
+HARNESS blocks of §3.3: which computation a backend implements, on which
+platforms/formats, which inputs are *marshaled* through a repack clause —
+the mprotect-amortized conversions of Fig. 8-10 — and what persistent
+state is managed by BeforeFirstExecution / AfterLastExecution hooks).
+
+This module provides a tokenizer with source positions, a recursive-descent
+parser producing the ASTs below, and the builtin spec texts.  The detection
+pass (`repro.core.detect`) *generates* jaxpr matchers from the What-ASTs;
+`repro.core.spec` *compiles* the How-descriptors into executable `Harness`
+objects — both analogues of the paper generating LLVM detection functions
+and harness glue at LLVM build time.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
-from typing import List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 
 # ---------------------------------------------------------------------------
-# AST
+# AST — What (computation)
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
@@ -194,29 +216,135 @@ class Computation:
 
 
 # ---------------------------------------------------------------------------
+# AST — How (harness descriptors, paper §3.3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MarshalClause:
+    """``marshal <name> = <repack>(<keys>)``: the named input is produced by
+    the registered repack function, memoized in the marshaling cache on the
+    fingerprints of the key arrays (the mprotect analogue).  Each key may
+    list ``|``-separated alternatives; the first present in the binding is
+    used (e.g. ``rowstr|rowidx`` covers CSR and COO matches)."""
+    name: str
+    repack: str
+    keys: Tuple[Tuple[str, ...], ...]
+
+    def __str__(self):
+        ks = ", ".join("|".join(alts) for alts in self.keys)
+        return f"marshal {self.name} = {self.repack}({ks});"
+
+
+_DEFAULT_PLATFORMS = ("cpu", "tpu")
+
+
+@dataclasses.dataclass(frozen=True)
+class HarnessDecl:
+    """One HARNESS block: how a named backend implements What-computations."""
+    name: str
+    implements: Tuple[str, ...]
+    platforms: Tuple[str, ...] = _DEFAULT_PLATFORMS
+    formats: Tuple[str, ...] = ()
+    jit_safe: bool = True                    # host_only; sets this False
+    default_for: Tuple[str, ...] = ()
+    marshal: Tuple[MarshalClause, ...] = ()
+    persistent: Tuple[str, ...] = ()
+    before_first: Optional[str] = None       # BeforeFirstExecution hook name
+    after_last: Optional[str] = None         # AfterLastExecution hook name
+
+    def __str__(self):
+        lines = [f"HARNESS {self.name} implements {', '.join(self.implements)}"]
+        if self.platforms != _DEFAULT_PLATFORMS:
+            lines.append(f"  platforms {', '.join(self.platforms)};")
+        if self.formats:
+            lines.append(f"  formats {', '.join(self.formats)};")
+        if not self.jit_safe:
+            lines.append("  host_only;")
+        if self.default_for:
+            lines.append(f"  default_for {', '.join(self.default_for)};")
+        lines.extend(f"  {m}" for m in self.marshal)
+        if self.persistent:
+            lines.append(f"  persistent {', '.join(self.persistent)};")
+        if self.before_first is not None:
+            lines.append(f"  BeforeFirstExecution {self.before_first};")
+        if self.after_last is not None:
+            lines.append(f"  AfterLastExecution {self.after_last};")
+        return "\n".join(lines)
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """A parsed LiLAC description: What-programs + How-descriptors."""
+    computations: Tuple[Computation, ...]
+    harnesses: Tuple[HarnessDecl, ...]
+
+    def __str__(self):
+        return "\n\n".join([str(c) for c in self.computations]
+                           + [str(h) for h in self.harnesses])
+
+    def computation(self, name: str) -> Computation:
+        for c in self.computations:
+            if c.name == name:
+                return c
+        raise KeyError(name)
+
+
+# ---------------------------------------------------------------------------
 # Tokenizer + recursive-descent parser
 # ---------------------------------------------------------------------------
 
 _TOKEN_RE = re.compile(
-    r"\s*(?:(?P<num>\d+(?:\.\d+)?)|(?P<name>[A-Za-z_]\w*)"
-    r"|(?P<op><=|[()\[\]{}=;+*<])|(?P<bad>\S))"
+    r"[ \t\r\n]*(?:(?P<comment>--[^\n]*)"
+    r"|(?P<num>\d+(?:\.\d+)?)"
+    r"|(?P<name>[A-Za-z_]\w*(?:\.[A-Za-z_]\w*)*)"
+    r"|(?P<op><=|[()\[\]{}=;+*<,|])|(?P<bad>\S))"
 )
 
-_KEYWORDS = {"COMPUTATION", "forall", "sum"}
+_KEYWORDS = {"COMPUTATION", "HARNESS", "forall", "sum"}
+
+# HARNESS clause words are contextual (not reserved in expressions).
+_CLAUSES = {"platforms", "formats", "default_for", "host_only", "marshal",
+            "persistent", "BeforeFirstExecution", "AfterLastExecution"}
 
 
 class ParseError(ValueError):
-    pass
+    """Parse failure with 1-based source position (``line``, ``col``)."""
+
+    def __init__(self, msg: str, line: Optional[int] = None,
+                 col: Optional[int] = None):
+        if line is not None:
+            msg = f"{msg} (at line {line}, col {col})"
+        super().__init__(msg)
+        self.line = line
+        self.col = col
 
 
-def _tokenize(src: str) -> List[Tuple[str, str]]:
-    toks = []
+def _line_col_fn(src: str):
+    """O(1)-per-query offset -> (line, col) via precomputed line starts."""
+    import bisect
+
+    starts = [0] + [i + 1 for i, c in enumerate(src) if c == "\n"]
+
+    def line_col(pos: int) -> Tuple[int, int]:
+        li = bisect.bisect_right(starts, pos) - 1
+        return li + 1, pos - starts[li] + 1
+
+    return line_col
+
+
+def _tokenize(src: str):
+    line_col = _line_col_fn(src)
+    toks: List[Tuple[str, str]] = []
+    positions: List[Tuple[int, int]] = []
     pos = 0
     while pos < len(src):
         m = _TOKEN_RE.match(src, pos)
         if not m:
             break
+        start = m.end() - len(m.group(0).lstrip())
         pos = m.end()
+        if m.group("comment") is not None:
+            continue
         if m.group("num") is not None:
             toks.append(("num", m.group("num")))
         elif m.group("name") is not None:
@@ -225,30 +353,64 @@ def _tokenize(src: str) -> List[Tuple[str, str]]:
         elif m.group("op") is not None:
             toks.append(("op", m.group("op")))
         elif m.group("bad") is not None:
-            raise ParseError(f"bad token {m.group('bad')!r} at {pos}")
-    return toks
+            line, col = line_col(start)
+            raise ParseError(f"bad token {m.group('bad')!r}", line, col)
+        positions.append(line_col(start))
+    return toks, positions, line_col(len(src))
 
 
 class _Parser:
-    def __init__(self, toks: List[Tuple[str, str]]):
-        self.toks = toks
+    def __init__(self, src: str):
+        self.toks, self.positions, self.end_pos = _tokenize(src)
         self.i = 0
 
     def peek(self) -> Optional[Tuple[str, str]]:
         return self.toks[self.i] if self.i < len(self.toks) else None
 
+    def pos(self) -> Tuple[int, int]:
+        """Position of the current (next-to-consume) token."""
+        if self.i < len(self.positions):
+            return self.positions[self.i]
+        return self.end_pos
+
+    def error(self, msg: str) -> ParseError:
+        line, col = self.pos()
+        return ParseError(msg, line, col)
+
     def next(self) -> Tuple[str, str]:
         if self.i >= len(self.toks):
-            raise ParseError("unexpected end of input")
+            raise self.error("unexpected end of input")
         t = self.toks[self.i]
         self.i += 1
         return t
 
     def expect(self, kind: str, value: Optional[str] = None) -> str:
-        k, v = self.next()
+        if self.i >= len(self.toks):
+            raise self.error(f"expected {value or kind}, got end of input")
+        k, v = self.toks[self.i]
         if k != kind or (value is not None and v != value):
-            raise ParseError(f"expected {value or kind}, got {v!r}")
+            raise self.error(f"expected {value or kind}, got {v!r}")
+        self.i += 1
         return v
+
+    # spec ::= { computation | harness }
+    def spec(self) -> Spec:
+        comps: List[Computation] = []
+        harnesses: List[HarnessDecl] = []
+        while True:
+            t = self.peek()
+            if t is None:
+                break
+            if t == ("kw", "COMPUTATION"):
+                comps.append(self.program())
+            elif t == ("kw", "HARNESS"):
+                harnesses.append(self.harness())
+            else:
+                raise self.error(
+                    f"expected COMPUTATION or HARNESS, got {t[1]!r}")
+        if not comps and not harnesses:
+            raise self.error("empty spec")
+        return Spec(tuple(comps), tuple(harnesses))
 
     # program ::= COMPUTATION <name> <body>
     def program(self) -> Computation:
@@ -318,7 +480,7 @@ class _Parser:
     def atom(self) -> Expr:
         t = self.peek()
         if t is None:
-            raise ParseError("unexpected end")
+            raise self.error("unexpected end")
         if t[0] == "num":
             self.next()
             return Const(float(t[1]) if "." in t[1] else int(t[1]))
@@ -329,64 +491,168 @@ class _Parser:
             return e
         return self.addr_or_var()
 
+    # -- harness blocks (§3.3) ----------------------------------------------
+
+    def namelist(self) -> Tuple[str, ...]:
+        names = [self.expect("name")]
+        while self.peek() == ("op", ","):
+            self.next()
+            names.append(self.expect("name"))
+        return tuple(names)
+
+    def keylist(self) -> Tuple[Tuple[str, ...], ...]:
+        keys = [self.key()]
+        while self.peek() == ("op", ","):
+            self.next()
+            keys.append(self.key())
+        return tuple(keys)
+
+    def key(self) -> Tuple[str, ...]:
+        alts = [self.expect("name")]
+        while self.peek() == ("op", "|"):
+            self.next()
+            alts.append(self.expect("name"))
+        return tuple(alts)
+
+    def harness(self) -> HarnessDecl:
+        self.expect("kw", "HARNESS")
+        name = self.expect("name")
+        self.expect("name", "implements")
+        implements = self.namelist()
+        platforms = _DEFAULT_PLATFORMS
+        formats: Tuple[str, ...] = ()
+        jit_safe = True
+        default_for: Tuple[str, ...] = ()
+        marshal: List[MarshalClause] = []
+        persistent: Tuple[str, ...] = ()
+        before_first: Optional[str] = None
+        after_last: Optional[str] = None
+        while True:
+            t = self.peek()
+            if t is None or t[0] == "kw":
+                break
+            if t[0] != "name":
+                raise self.error(f"expected a HARNESS clause, got {t[1]!r}")
+            word = t[1]
+            if word not in _CLAUSES:
+                raise self.error(f"unknown HARNESS clause {word!r}")
+            self.next()
+            if word == "platforms":
+                platforms = self.namelist()
+            elif word == "formats":
+                formats = self.namelist()
+            elif word == "default_for":
+                default_for = self.namelist()
+            elif word == "host_only":
+                jit_safe = False
+            elif word == "marshal":
+                mname = self.expect("name")
+                self.expect("op", "=")
+                repack = self.expect("name")
+                self.expect("op", "(")
+                keys = self.keylist()
+                self.expect("op", ")")
+                marshal.append(MarshalClause(mname, repack, keys))
+            elif word == "persistent":
+                persistent = persistent + self.namelist()
+            elif word == "BeforeFirstExecution":
+                before_first = self.expect("name")
+            elif word == "AfterLastExecution":
+                after_last = self.expect("name")
+            self.expect("op", ";")
+        return HarnessDecl(name=name, implements=implements,
+                           platforms=platforms, formats=formats,
+                           jit_safe=jit_safe, default_for=default_for,
+                           marshal=tuple(marshal), persistent=persistent,
+                           before_first=before_first, after_last=after_last)
+
+
+def parse_spec(src: str) -> Spec:
+    """Parse a full LiLAC spec: computations and/or harness blocks."""
+    p = _Parser(src)
+    spec = p.spec()
+    if p.peek() is not None:
+        raise p.error(f"trailing tokens: {p.peek()}")
+    return spec
+
 
 def parse(src: str) -> Computation:
-    """Parse a LiLAC-What program."""
-    p = _Parser(_tokenize(src))
-    prog = p.program()
-    if p.peek() is not None:
-        raise ParseError(f"trailing tokens: {p.peek()}")
-    return prog
+    """Parse a LiLAC-What program (exactly one COMPUTATION; any HARNESS
+    blocks in the text are parsed, validated and discarded)."""
+    spec = parse_spec(src)
+    if len(spec.computations) != 1:
+        raise ParseError(
+            f"expected exactly one COMPUTATION, got {len(spec.computations)}")
+    return spec.computations[0]
+
+
+def parse_harness(src: str) -> HarnessDecl:
+    """Parse a single HARNESS block (no COMPUTATION)."""
+    spec = parse_spec(src)
+    if spec.computations or len(spec.harnesses) != 1:
+        raise ParseError("expected exactly one HARNESS block")
+    return spec.harnesses[0]
 
 
 # ---------------------------------------------------------------------------
-# Builtin What-programs (paper Figs. 2, 5, 11 + framework computations)
+# Builtin specs (paper Figs. 2, 5, 11 + framework computations, with the
+# §3.3 harness descriptors for the jnp.* backends; the pallas.* backends
+# declare their HARNESS blocks next to their kernels under repro/kernels/).
 # ---------------------------------------------------------------------------
 
-SPMV_CSR = parse("""
+BUILTIN_SPECS: Dict[str, str] = {}
+
+BUILTIN_SPECS["spmv"] = """
 COMPUTATION spmv_csr
 forall(0 <= i < rows) {
   output[i] = sum(rowstr[i] <= j < rowstr[i+1]) a[j] * iv[colidx[j]];
 }
-""")
 
-SPMV_COO = parse("""
 COMPUTATION spmv_coo
 forall(0 <= i < rows) {
   output[i] = sum(0 <= j < nnz) delta[rowidx[j]] * a[j] * iv[colidx[j]];
 }
-""")
+
+HARNESS jnp.segment implements spmv_csr, spmv_coo
+  formats CSR, COO;
+  default_for cpu, tpu;
+
+HARNESS jnp.ell implements spmv_csr, spmv_coo
+  formats CSR, COO;
+  host_only;
+  marshal ell = ell_pack(a, colidx, rowstr|rowidx);
+
+HARNESS jnp.bcsr implements spmv_csr, spmv_coo
+  formats CSR, COO;
+  host_only;
+  marshal bcsr = bcsr_pack(a, colidx, rowstr|rowidx);
+
+HARNESS jnp.dense implements spmv_csr, spmv_coo
+  formats CSR, COO;
+  host_only;
+  marshal dense = densify(a, colidx, rowstr|rowidx);
+"""
 # delta[rowidx[j]] denotes the i==rowidx[j] indicator; the generated matcher
 # realizes it as the scatter-add-by-row skeleton (see detect.py).
 
-SPMV_ELL = parse("""
+BUILTIN_SPECS["spmv_padded"] = """
 COMPUTATION spmv_ell
 forall(0 <= i < rows) {
   output[i] = sum(0 <= j < width) val[i*width+j] * iv[colidx[i*width+j]];
 }
-""")
 
-SPMV_JDS = parse("""
 COMPUTATION spmv_jds
 forall(0 <= i < rows) {
   output[perm[i]] = sum(0 <= j < nzcnt[i])
       val[jd_ptr[j]+i] * vector[col_ind[jd_ptr[j]+i]];
 }
-""")
 
-DOTPRODUCT = parse("""
-COMPUTATION dotproduct
-result = sum(0 <= i < length) a[i] * b[i];
-""")
+HARNESS jnp.ell implements spmv_ell, spmv_jds
+  formats ELL, JDS;
+  default_for cpu;
+"""
 
-GEMV = parse("""
-COMPUTATION gemv
-forall(0 <= i < rows) {
-  output[i] = sum(0 <= j < cols) mat[i*cols+j] * vec[j];
-}
-""")
-
-SPMM_CSR = parse("""
+BUILTIN_SPECS["spmm"] = """
 COMPUTATION spmm_csr
 forall(0 <= i < rows) {
   forall(0 <= n < ncols) {
@@ -394,21 +660,73 @@ forall(0 <= i < rows) {
         a[j] * dense[colidx[j]*ncols+n];
   }
 }
-""")
+
+HARNESS jnp.segment implements spmm_csr
+  formats CSR, COO;
+  default_for cpu;
+
+HARNESS jnp.bcsr implements spmm_csr
+  formats CSR, COO;
+  host_only;
+  marshal bcsr = bcsr_pack_mm(a, colidx, rowstr|rowidx);
+"""
+
+BUILTIN_SPECS["dotproduct"] = """
+COMPUTATION dotproduct
+result = sum(0 <= i < length) a[i] * b[i];
+
+HARNESS jnp.dot implements dotproduct
+  default_for cpu, tpu;
+"""
+
+BUILTIN_SPECS["gemv"] = """
+COMPUTATION gemv
+forall(0 <= i < rows) {
+  output[i] = sum(0 <= j < cols) mat[i*cols+j] * vec[j];
+}
+
+HARNESS jnp.dot implements gemv
+  default_for cpu, tpu;
+"""
 
 # The MoE expert FFN with one-hot dispatch: the sparse computation inside
 # modern LMs.  dispatch[t*E+e] is top-k sparse; computing h for all (e, t)
 # is the naive dense realization the LiLAC pass detects and replaces.
-MOE_FFN = parse("""
+BUILTIN_SPECS["moe_ffn"] = """
 COMPUTATION moe_ffn
 forall(0 <= t < tokens) {
   out[t*dm+d] = sum(0 <= e < experts)
       dispatch[t*experts+e] * y[e*tokens*dm+t*dm+d];
 }
-""")
 
-BUILTINS = {
-    c.name: c
-    for c in [SPMV_CSR, SPMV_COO, SPMV_ELL, SPMV_JDS, SPMM_CSR,
-              DOTPRODUCT, GEMV, MOE_FFN]
+HARNESS jnp.capacity implements moe_ffn
+  default_for cpu;
+"""
+
+# The dense baseline registers AFTER the Pallas kernels' own HARNESS
+# blocks: candidate order is registration order, and the autotuner's
+# exploration budget truncates in that order, so the baseline must stay
+# last exactly as in the pre-spec hand-wired registry.
+BUILTIN_SPECS["moe_ffn_baseline"] = """
+HARNESS dense implements moe_ffn
+"""
+
+# Families whose harnesses must register after the kernel packages'.
+POST_KERNEL_FAMILIES = ("moe_ffn_baseline",)
+
+_BUILTIN_PARSED: Dict[str, Spec] = {k: parse_spec(v)
+                                    for k, v in BUILTIN_SPECS.items()}
+
+BUILTINS: Dict[str, Computation] = {
+    c.name: c for s in _BUILTIN_PARSED.values() for c in s.computations
 }
+
+# Back-compat constants (paper Figs. 2, 5, 11).
+SPMV_CSR = BUILTINS["spmv_csr"]
+SPMV_COO = BUILTINS["spmv_coo"]
+SPMV_ELL = BUILTINS["spmv_ell"]
+SPMV_JDS = BUILTINS["spmv_jds"]
+SPMM_CSR = BUILTINS["spmm_csr"]
+DOTPRODUCT = BUILTINS["dotproduct"]
+GEMV = BUILTINS["gemv"]
+MOE_FFN = BUILTINS["moe_ffn"]

@@ -1,0 +1,16 @@
+"""LiLAC HARNESS declaration for the ragged grouped-matmul MoE kernel."""
+from __future__ import annotations
+
+from repro.core.spec import harness
+
+
+@harness("""
+HARNESS pallas.gmm implements moe_ffn
+  default_for tpu;
+""")
+def moe_gmm_pallas(b, ctx):
+    from repro.kernels.moe_gmm import ops as gmm_ops
+    interpret = ctx.platform != "tpu"
+    return gmm_ops.moe_ffn(b["x"], b["gate"], b["idx"],
+                           b["wg"], b["wu"], b["wd"],
+                           interpret=interpret)

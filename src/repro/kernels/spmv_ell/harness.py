@@ -1,0 +1,49 @@
+"""LiLAC HARNESS declarations for the ELL/JDS row-slab Pallas kernel.
+
+The paper's "add a backend" story: a HARNESS block (the How-descriptor)
+plus a kernel body, nothing else.  Marshaling for the CSR/COO entry point
+is generated from the declared ``ell_pack128`` repack clause — this module
+never touches the MarshalingCache directly.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.spec import harness
+
+
+@harness("""
+HARNESS pallas.ell implements spmv_ell, spmv_jds
+  formats ELL, JDS;
+  default_for tpu;
+""")
+def spmv_ell_pallas(b, ctx):
+    """Direct ELL/JDS match -> VPU row-slab kernel."""
+    from repro.kernels.spmv_ell import ops as ell_ops
+    perm = b.get("perm")
+    interpret = ctx.platform != "tpu"
+    acc = ell_ops.spmv_ell(b["val"], b["col_ind"], b["vector"],
+                           interpret=interpret)
+    if perm is None:
+        return acc
+    out = jnp.zeros((b["rows"],), acc.dtype)
+    return out.at[perm].set(acc)
+
+
+# pallas harnesses are TPU-targeted: on CPU they run the kernel
+# interpreter (correctness only, far too slow for autotune); they
+# stay selectable by explicit policy name.
+@harness("""
+HARNESS pallas.ell implements spmv_csr, spmv_coo
+  platforms tpu;
+  formats CSR, COO;
+  host_only;
+  marshal ell = ell_pack128(a, colidx, rowstr|rowidx);
+""")
+def spmv_ell_pallas_host(b, ctx, *, ell):
+    """CSR/COO match -> marshaled ELL repack -> Pallas slab kernel."""
+    from repro.kernels.spmv_ell import ops as ell_ops
+    interpret = ctx.platform != "tpu"
+    acc = ell_ops.spmv_ell(ell.val, ell.col, b["iv"], interpret=interpret)
+    out = jnp.zeros((b["rows"],), acc.dtype)
+    return out.at[ell.perm].set(acc)

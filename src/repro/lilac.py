@@ -1,0 +1,59 @@
+"""repro.lilac — the LiLAC declarative spec API, in one namespace.
+
+The paper's workflow (§3, Fig. 3): a library implementer writes a one-off
+LiLAC description — a What-clause (COMPUTATION) plus a How-clause (HARNESS:
+platforms, formats, marshaled inputs with repack clauses, persistent state
+with BeforeFirstExecution/AfterLastExecution hooks) — and application code
+is accelerated without modification through a single compiler entry point.
+
+Application authors::
+
+    from repro import lilac
+
+    fast = lilac.compile(step, mode="host", policy="autotune")
+    fast(val, col, row_ptr, vec)        # detected, rewritten, tuned
+
+Library implementers (spec + function = a new backend)::
+
+    @lilac.harness('''
+    HARNESS mylib.spmv implements spmv_csr
+      formats CSR;
+      host_only;
+      marshal packed = my_pack(a, colidx, rowstr|rowidx);
+    ''')
+    def mylib_spmv(binding, ctx, *, packed):
+        return mylib.spmv(packed, binding["iv"])
+
+``lilac_optimize`` / ``lilac_accelerate`` remain as deprecation shims:
+``lilac_optimize(fn)`` is ``lilac.compile(fn, mode="trace")`` and
+``lilac_accelerate(fn)`` is ``lilac.compile(fn, mode="host")``.
+"""
+from repro.core.harness import (REGISTRY, CallCtx, DuplicateHarnessError,
+                                Harness, HarnessRegistry)
+from repro.core.marshal import MarshalingCache, ReadObject, TrackedArray
+from repro.core.pass_manager import (CompileOptions, LilacDeprecationWarning,
+                                     LilacFunction, compile, lilac_accelerate,
+                                     lilac_optimize)
+from repro.core.spec import (HOOKS, REPACKS, SpecError, build_harnesses,
+                             harness, hook, register_builtins, register_spec,
+                             repack)
+from repro.core.what_lang import (BUILTIN_SPECS, BUILTINS, Computation,
+                                  HarnessDecl, MarshalClause, ParseError,
+                                  Spec, parse, parse_harness, parse_spec)
+
+__all__ = [
+    # entry point
+    "compile", "CompileOptions", "LilacFunction",
+    # spec surface
+    "harness", "repack", "hook", "register_spec", "register_builtins",
+    "build_harnesses", "SpecError", "REPACKS", "HOOKS",
+    # language
+    "parse", "parse_spec", "parse_harness", "ParseError", "Spec",
+    "Computation", "HarnessDecl", "MarshalClause", "BUILTINS",
+    "BUILTIN_SPECS",
+    # registry / runtime
+    "REGISTRY", "Harness", "HarnessRegistry", "DuplicateHarnessError",
+    "CallCtx", "MarshalingCache", "ReadObject", "TrackedArray",
+    # deprecated shims
+    "lilac_optimize", "lilac_accelerate", "LilacDeprecationWarning",
+]

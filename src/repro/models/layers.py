@@ -377,12 +377,12 @@ _LILAC_MOE_CACHE: Dict[int, Any] = {}
 
 
 def _lilac_moe_2d():
-    """lilac_optimize applied to the naive form — the paper's compiler pass
+    """lilac.compile applied to the naive form — the paper's compiler pass
     running inside the LM framework. Cached module-level (detection runs
     once per shape signature)."""
     if 0 not in _LILAC_MOE_CACHE:
-        from repro.core import lilac_optimize
-        _LILAC_MOE_CACHE[0] = lilac_optimize(_moe_naive_2d)
+        from repro import lilac
+        _LILAC_MOE_CACHE[0] = lilac.compile(_moe_naive_2d)
     return _LILAC_MOE_CACHE[0]
 
 

@@ -6,6 +6,8 @@ import pytest
 # tests run on the single host device; the dry-run (and only the dry-run)
 # forces 512 placeholder devices in its own subprocess.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can drive the benchmarks package (selection parity)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 
 @pytest.fixture(autouse=True)

@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lilac_accelerate, lilac_optimize
+from repro import lilac
 from repro.core.autotune import (AutotuneCache, Autotuner, pow2_bucket,
                                  signature_of, sparsity_bucket,
                                  synthesize_operands)
@@ -233,7 +233,7 @@ def test_budget_limits_explored_candidates():
 def test_host_autotune_persists_and_warm_starts_in_process():
     csr, vec = _problem()
     naive = _naive_fn(csr.rows, csr.nnz)
-    acc = lilac_accelerate(naive, policy="autotune")
+    acc = lilac.compile(naive, mode="host", policy="autotune")
     out = acc(csr.val, csr.col_ind, csr.row_ptr, vec)
     ref = naive(csr.val, csr.col_ind, csr.row_ptr, vec)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3,
@@ -245,7 +245,7 @@ def test_host_autotune_persists_and_warm_starts_in_process():
 
     # a SECOND LilacFunction over the same signature: no re-timing
     timed = tuner.stats.timing_calls
-    acc2 = lilac_accelerate(naive, policy="autotune")
+    acc2 = lilac.compile(naive, mode="host", policy="autotune")
     acc2(csr.val, csr.col_ind, csr.row_ptr, vec)
     assert acc2.last_selections[0][1] == winner
     assert tuner.stats.timing_calls == timed
@@ -254,7 +254,7 @@ def test_host_autotune_persists_and_warm_starts_in_process():
 def test_trace_mode_winner_pinning_determinism():
     csr, vec = _problem()
     naive = _naive_fn(csr.rows, csr.nnz)
-    opt = lilac_optimize(naive, policy="autotune")
+    opt = lilac.compile(naive, policy="autotune")
     out = opt(csr.val, csr.col_ind, csr.row_ptr, vec)
     ref = naive(csr.val, csr.col_ind, csr.row_ptr, vec)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3,
@@ -277,7 +277,7 @@ def test_trace_mode_winner_pinning_determinism():
     assert tuner.stats.timing_calls == timed
 
     # a fresh LilacFunction over the same signature selects the same winner
-    opt2 = lilac_optimize(naive, policy="autotune")
+    opt2 = lilac.compile(naive, policy="autotune")
     opt2(csr.val, csr.col_ind, csr.row_ptr, vec)
     assert opt2.last_selections[0][1] == winner
     assert tuner.stats.timing_calls == timed
@@ -286,7 +286,8 @@ def test_trace_mode_winner_pinning_determinism():
 _SUBPROC = textwrap.dedent("""
     import json, sys
     import numpy as np, jax, jax.numpy as jnp
-    from repro.core import lilac_accelerate, REGISTRY
+    from repro import lilac
+    from repro.core import REGISTRY
     from repro.sparse import csr_from_dense
     from repro.sparse.random import random_dense_sparse
 
@@ -300,7 +301,7 @@ _SUBPROC = textwrap.dedent("""
                          jnp.diff(row_ptr), total_repeat_length=nnz)
         return jax.ops.segment_sum(val * v[col], row, num_segments=rows)
 
-    acc = lilac_accelerate(naive, policy="autotune")
+    acc = lilac.compile(naive, mode="host", policy="autotune")
     acc(csr.val, csr.col_ind, csr.row_ptr, vec)
     print(json.dumps({
         "selected": acc.last_selections[0][1],
@@ -343,7 +344,7 @@ def test_autotune_disable_env(monkeypatch):
     REGISTRY.reset_autotuner()
     csr, vec = _problem()
     naive = _naive_fn(csr.rows, csr.nnz)
-    acc = lilac_accelerate(naive, policy="autotune")
+    acc = lilac.compile(naive, mode="host", policy="autotune")
     acc(csr.val, csr.col_ind, csr.row_ptr, vec)
     tuner = REGISTRY.autotuner
     assert tuner.stats.timing_calls == 0

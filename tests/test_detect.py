@@ -214,7 +214,7 @@ def test_negative_wrong_rowptr_semantics(det):
 
 def test_spmm_csr_detection_and_rewrite(det):
     """SpMM (CSR x dense matrix) — the doubly-forall What-program."""
-    from repro.core import lilac_accelerate, lilac_optimize
+    from repro import lilac
     rng = np.random.default_rng(0)
     val = jnp.asarray(rng.standard_normal(NNZ).astype(np.float32))
     col = jnp.asarray(rng.integers(0, COLS, NNZ).astype(np.int32))
@@ -232,12 +232,12 @@ def test_spmm_csr_detection_and_rewrite(det):
     assert [(m.computation, m.format) for m in r.matches] \
         == [("spmm_csr", "CSR")]
     ref = f(val, col, row_ptr, dense)
-    opt = lilac_optimize(f)
+    opt = lilac.compile(f)
     np.testing.assert_allclose(np.asarray(opt(val, col, row_ptr, dense)),
                                np.asarray(ref), atol=1e-4)
-    acc = lilac_accelerate(f, policy="jnp.bcsr")
+    acc = lilac.compile(f, mode="host", policy="jnp.bcsr")
     np.testing.assert_allclose(np.asarray(acc(val, col, row_ptr, dense)),
                                np.asarray(ref), atol=1e-4, rtol=1e-4)
-    acc2 = lilac_accelerate(f, policy="pallas.bcsr")
+    acc2 = lilac.compile(f, mode="host", policy="pallas.bcsr")
     np.testing.assert_allclose(np.asarray(acc2(val, col, row_ptr, dense)),
                                np.asarray(ref), atol=1e-4, rtol=1e-4)

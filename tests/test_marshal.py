@@ -3,8 +3,8 @@ recomputed only when the underlying data changes."""
 import jax.numpy as jnp
 import numpy as np
 
+from repro import lilac
 from repro.core import MarshalingCache, ReadObject, TrackedArray, fingerprint
-from repro.core import lilac_accelerate
 import jax
 
 
@@ -74,7 +74,7 @@ def test_marshaling_cols_invariant():
                          total_repeat_length=val.shape[0])
         return jax.ops.segment_sum(val * vec[col], row, num_segments=32)
 
-    acc = lilac_accelerate(naive, policy="jnp.ell")
+    acc = lilac.compile(naive, mode="host", policy="jnp.ell")
     acc(csr.val, csr.col_ind, csr.row_ptr, vec)
     m0 = acc.cache.stats.misses
     acc(csr.val, csr.col_ind, csr.row_ptr, vec * 3)   # vec changed, matrix not

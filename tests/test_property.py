@@ -14,7 +14,7 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import lilac_accelerate, lilac_optimize
+from repro import lilac
 from repro.core.marshal import fingerprint
 from repro.sparse import (
     csr_from_dense, ell_from_csr, jds_from_csr,
@@ -66,7 +66,7 @@ def test_rewrite_soundness_any_problem(prob):
         return jax.ops.segment_sum(val * v[col], row, num_segments=rows)
 
     ref = naive(csr.val, csr.col_ind, csr.row_ptr, jnp.asarray(vec))
-    opt = lilac_optimize(naive)
+    opt = lilac.compile(naive)
     out = opt(csr.val, csr.col_ind, csr.row_ptr, jnp.asarray(vec))
     assert len(opt.last_report.matches) == 1
     assert opt.last_report.matches[0].format == "CSR"
@@ -89,7 +89,7 @@ def test_host_backends_any_problem(prob, backend):
         return jax.ops.segment_sum(val * v[col], row, num_segments=rows)
 
     ref = naive(csr.val, csr.col_ind, csr.row_ptr, jnp.asarray(vec))
-    acc = lilac_accelerate(naive, policy=backend)
+    acc = lilac.compile(naive, mode="host", policy=backend)
     out = acc(csr.val, csr.col_ind, csr.row_ptr, jnp.asarray(vec))
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=1e-3, rtol=1e-3)

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import REGISTRY, lilac_accelerate, lilac_optimize
+from repro import lilac
+from repro.core import REGISTRY
 from repro.sparse import random_csr
 
 
@@ -29,7 +30,7 @@ def naive_spmv(val, col, row_ptr, vec):
 def test_trace_mode_equivalence(problem):
     csr, vec = problem
     ref = naive_spmv(csr.val, csr.col_ind, csr.row_ptr, vec)
-    opt = lilac_optimize(naive_spmv)
+    opt = lilac.compile(naive_spmv)
     out = opt(csr.val, csr.col_ind, csr.row_ptr, vec)
     assert len(opt.last_report.matches) == 1
     np.testing.assert_allclose(out, ref, atol=1e-5)
@@ -38,7 +39,7 @@ def test_trace_mode_equivalence(problem):
 def test_trace_mode_is_jittable(problem):
     csr, vec = problem
     ref = naive_spmv(csr.val, csr.col_ind, csr.row_ptr, vec)
-    opt = lilac_optimize(naive_spmv)
+    opt = lilac.compile(naive_spmv)
     out = jax.jit(lambda *a: opt(*a))(csr.val, csr.col_ind, csr.row_ptr, vec)
     np.testing.assert_allclose(out, ref, atol=1e-5)
 
@@ -49,7 +50,7 @@ def test_every_backend_equivalent(problem, backend):
     """Table 2's premise: all harnesses compute the same function."""
     csr, vec = problem
     ref = naive_spmv(csr.val, csr.col_ind, csr.row_ptr, vec)
-    acc = lilac_accelerate(naive_spmv, policy=backend)
+    acc = lilac.compile(naive_spmv, mode="host", policy=backend)
     out = acc(csr.val, csr.col_ind, csr.row_ptr, vec)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-4, rtol=2e-4)
@@ -62,7 +63,7 @@ def test_unmatched_code_passes_through(problem):
         y = naive_spmv(val, col, row_ptr, vec)
         return jnp.tanh(y) + 1.0, y.sum()
 
-    opt = lilac_optimize(f)
+    opt = lilac.compile(f)
     out, s = opt(csr.val, csr.col_ind, csr.row_ptr, vec)
     ref_y = naive_spmv(csr.val, csr.col_ind, csr.row_ptr, vec)
     np.testing.assert_allclose(out, jnp.tanh(ref_y) + 1.0, atol=1e-5)
@@ -71,7 +72,7 @@ def test_unmatched_code_passes_through(problem):
 
 def test_disabled_pass_is_identity(problem):
     csr, vec = problem
-    opt = lilac_optimize(naive_spmv, enabled=False)
+    opt = lilac.compile(naive_spmv, enabled=False)
     out = opt(csr.val, csr.col_ind, csr.row_ptr, vec)
     ref = naive_spmv(csr.val, csr.col_ind, csr.row_ptr, vec)
     np.testing.assert_allclose(out, ref, atol=0)
@@ -90,7 +91,7 @@ def test_loop_form_rewrite():
         return jax.lax.fori_loop(0, 40, body, jnp.zeros(16))
 
     ref = f(val, row, col, vec)
-    opt = lilac_optimize(f)
+    opt = lilac.compile(f)
     out = opt(val, row, col, vec)
     assert opt.last_report.matches[0].variant == "loop"
     np.testing.assert_allclose(out, ref, atol=1e-5)
@@ -109,7 +110,7 @@ def test_moe_rewrite_flop_reduction():
             jnp.asarray(rng.standard_normal((E, D, F)).astype(np.float32) * .1),
             jnp.asarray(rng.standard_normal((E, F, D)).astype(np.float32) * .1))
     ref = _moe_naive_2d(*args)
-    opt = lilac_optimize(_moe_naive_2d)
+    opt = lilac.compile(_moe_naive_2d)
     out = opt(*args)
     np.testing.assert_allclose(out, ref, atol=1e-4)
     c0 = jax.jit(_moe_naive_2d).lower(*args).compile().cost_analysis()
@@ -122,7 +123,7 @@ def test_moe_rewrite_flop_reduction():
 
 def test_autotune_policy(problem):
     csr, vec = problem
-    acc = lilac_accelerate(naive_spmv, policy="autotune")
+    acc = lilac.compile(naive_spmv, mode="host", policy="autotune")
     out = acc(csr.val, csr.col_ind, csr.row_ptr, vec)
     ref = naive_spmv(csr.val, csr.col_ind, csr.row_ptr, vec)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)

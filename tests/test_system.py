@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import lilac_accelerate
+from repro import lilac
 from repro.sparse import csr_from_dense
 from repro.sparse.random import random_graph_csr
 
@@ -33,7 +33,7 @@ def test_cg_solver_accelerated_converges():
     csr, a = _sym_pd_csr()
     n = a.shape[0]
     b = np.random.default_rng(1).standard_normal(n).astype(np.float32)
-    spmv = lilac_accelerate(_naive_spmv_fn(n, csr.nnz))
+    spmv = lilac.compile(_naive_spmv_fn(n, csr.nnz), mode="host")
 
     x = jnp.zeros(n)
     r = jnp.asarray(b) - spmv(csr.val, csr.col_ind, csr.row_ptr, x)
@@ -58,7 +58,7 @@ def test_pagerank_accelerated():
     must convert once and hit on every subsequent iteration (Fig. 18)."""
     g = random_graph_csr(64, avg_degree=6, seed=3)
     n = g.rows
-    spmv = lilac_accelerate(_naive_spmv_fn(n, g.nnz), policy="jnp.ell")
+    spmv = lilac.compile(_naive_spmv_fn(n, g.nnz), mode="host", policy="jnp.ell")
     x = jnp.ones(n) / n
     for _ in range(20):
         x = 0.85 * spmv(g.val, g.col_ind, g.row_ptr, x) + 0.15 / n
@@ -72,7 +72,7 @@ def test_bfs_accelerated():
     g = random_graph_csr(32, avg_degree=4, seed=5)
     n = g.rows
     val01 = jnp.asarray((np.asarray(g.val) > 0).astype(np.float32))
-    spmv = lilac_accelerate(_naive_spmv_fn(n, g.nnz))
+    spmv = lilac.compile(_naive_spmv_fn(n, g.nnz), mode="host")
     frontier = jnp.zeros(n).at[0].set(1.0)
     visited = frontier
     for _ in range(8):
