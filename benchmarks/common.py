@@ -13,10 +13,9 @@ from repro.sparse.random import random_dense_sparse, random_graph_csr
 
 
 def timeit(fn: Callable, *args, reps: int = 20, warmup: int = 3) -> float:
-    """Median seconds per call (steady state)."""
+    """Median seconds per call (steady state; ``warmup=0`` times cold)."""
     for _ in range(warmup):
-        out = fn(*args)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args))
     times = []
     for _ in range(reps):
         t0 = time.perf_counter()

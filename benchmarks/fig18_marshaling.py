@@ -1,48 +1,152 @@
-"""Paper Fig. 18: LiLAC vs naive library calls WITHOUT marshaling — the
-repack/invariant cache is cleared before every invocation, as if every call
-re-transferred and re-tuned.  Run on the iterative apps where the matrix is
-invariant (PageRank / CG / BFS analogues)."""
+"""Paper Fig. 18: the marshaling win — LiLAC vs naive library calls that
+re-transfer/re-pack on every invocation, plus the data-plane extension:
+the *shared plan-level cache*, where harnesses targeting the same (or a
+downstream) format ride one cached buffer instead of repacking privately.
+
+Three measurements per problem:
+
+  per-backend win   cached vs cache-cleared iteration (the classic Fig. 18
+                    curve) for each marshaling backend;
+  shared-plan win   cost of bringing up a second backend on a data plane
+                    already primed by the first (e.g. jnp.bcsr's
+                    CSR->DENSE->BCSR path riding jnp.dense's DENSE buffer)
+                    vs bringing it up on an empty plane;
+  plan stats        per-(source, target-format) hit/miss/bytes-avoided
+                    accounting straight from ``DataPlane.plan_stats()``.
+
+CLI:
+    python benchmarks/fig18_marshaling.py [--quick] [--reps N] [--out PATH]
+
+``--quick`` is the CI smoke grid; ``--out`` writes the BENCH_*.json
+perf-trajectory artifact the bench-smoke job uploads.
+"""
 from __future__ import annotations
+
+import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from benchmarks.common import emit, naive_spmv_fn, problem_suite, timeit, vec_for
+from benchmarks.common import (emit, naive_spmv_fn, problem_suite, timeit,
+                               vec_for, write_json_report)
 from repro import lilac
 
+# jnp.dense primes the DENSE intermediate that jnp.bcsr's planned
+# CSR->DENSE->BCSR8x128 path reuses; jnp.ell shares the CSR load.
+BACKENDS = ("jnp.dense", "jnp.bcsr", "jnp.ell")
 
-def run(reps: int = 5, iters: int = 10) -> dict:
-    suite = problem_suite()
-    out = {}
-    for prob_name in ("erdos_8k", "powerlaw_4k", "banded_8k"):
+
+def _iterate(spmv, csr, vec, iters, clear=False):
+    x = vec
+    for _ in range(iters):
+        if clear and spmv.cache is not None:
+            spmv.cache.clear()
+        y = spmv(csr.val, csr.col_ind, csr.row_ptr, x[: csr.shape[1]])
+        x = jnp.pad(y, (0, max(0, csr.shape[1] - y.shape[0])))
+    return x
+
+
+def run(reps: int = 5, iters: int = 10, quick: bool = False,
+        out: str | None = None) -> dict:
+    suite = problem_suite(quick=quick)
+    probs = list(suite) if quick else ["erdos_8k", "powerlaw_4k", "banded_8k"]
+    report = {
+        "benchmark": "fig18_marshaling",
+        "quick": quick,
+        "reps": reps,
+        "iters": iters,
+        "platform": jax.default_backend(),
+        "backends": list(BACKENDS),
+        "problems": {},
+    }
+    table = {}
+    for prob_name in probs:
         csr = suite[prob_name]
         naive = naive_spmv_fn(csr.rows, csr.nnz)
         vec = vec_for(csr)
+        prob_report = {"backends": {}, "shared_plan": {}}
 
-        def iterate(spmv, clear=False):
-            x = vec
-            for _ in range(iters):
-                if clear:
-                    spmv.cache.clear()
-                y = spmv(csr.val, csr.col_ind, csr.row_ptr,
-                         x[: csr.shape[1]])
-                x = jnp.pad(y, (0, max(0, csr.shape[1] - y.shape[0])))
-            return x
-
-        for backend in ("jnp.ell", "jnp.bcsr"):
+        # -- classic Fig. 18: cached vs re-packed-every-call ----------------
+        for backend in BACKENDS:
             acc = lilac.compile(naive, mode="host", policy=backend)
-            t_marshal = timeit(lambda: iterate(acc), reps=reps, warmup=1)
-            t_naive_m = timeit(lambda: iterate(acc, clear=True),
+            t_marshal = timeit(lambda: _iterate(acc, csr, vec, iters),
+                               reps=reps, warmup=1)
+            t_naive_m = timeit(lambda: _iterate(acc, csr, vec, iters,
+                                                clear=True),
                                reps=reps, warmup=1)
             win = t_naive_m / t_marshal
-            out[(prob_name, backend)] = win
-            emit(f"fig18.{prob_name}.{backend}", t_marshal * 1e6,
+            table[(prob_name, backend)] = win
+            st = acc.cache.stats
+            prob_report["backends"][backend] = {
+                "t_cached_s": t_marshal,
+                "t_repack_every_call_s": t_naive_m,
+                "marshaling_win": win,
+                "cache": {"hits": st.hits, "misses": st.misses,
+                          "bytes_avoided": st.bytes_avoided,
+                          "seconds_avoided": st.recompute_seconds_avoided},
+            }
+            emit(f"fig18.{prob_name}.{backend}", t_marshal,
                  f"marshaling_win={win:.2f}x "
-                 f"(cached {acc.cache.stats.recompute_seconds_avoided:.3f}s "
-                 f"of repack per run)")
-    return out
+                 f"(cached {st.recompute_seconds_avoided:.3f}s of repack)")
+
+        # -- shared plan-level cache: second backend rides the first --------
+        def first_call_seconds(policy, plane):
+            acc = lilac.compile(naive, mode="host", policy=policy,
+                                cache=plane)
+            t = timeit(lambda: acc(csr.val, csr.col_ind, csr.row_ptr, vec),
+                       reps=1, warmup=0)
+            return t, acc
+
+        plane_cold = lilac.DataPlane()
+        t_cold, _ = first_call_seconds("jnp.bcsr", plane_cold)
+
+        plane_shared = lilac.DataPlane()
+        t_prime, _ = first_call_seconds("jnp.dense", plane_shared)
+        t_shared, _ = first_call_seconds("jnp.bcsr", plane_shared)
+
+        stats = plane_shared.plan_stats()
+        bcsr_plan = stats.get("csr_binding->BCSR8x128", {})
+        shared = {
+            "t_bcsr_cold_plane_s": t_cold,
+            "t_dense_prime_s": t_prime,
+            "t_bcsr_on_primed_plane_s": t_shared,
+            "shared_plan_win": t_cold / t_shared if t_shared else float("nan"),
+            "bcsr_path": bcsr_plan.get("last_path", []),
+            "bcsr_rode_cached_intermediate":
+                bool(bcsr_plan.get("shared_prefix_hits", 0)),
+            "plan_stats": stats,
+        }
+        prob_report["shared_plan"] = shared
+        emit(f"fig18.{prob_name}.shared_plan", t_shared,
+             f"win={shared['shared_plan_win']:.2f}x over cold plane; "
+             f"path={'->'.join(shared['bcsr_path'])} "
+             f"shared_prefix={shared['bcsr_rode_cached_intermediate']}")
+        report["problems"][prob_name] = prob_report
+
+    report["shared_plan_always_rides_intermediate"] = all(
+        p["shared_plan"]["bcsr_rode_cached_intermediate"]
+        for p in report["problems"].values())
+    report["all_caches_hit"] = all(
+        b["cache"]["hits"] > 0 and b["cache"]["bytes_avoided"] > 0
+        for p in report["problems"].values()
+        for b in p["backends"].values())
+    if out:
+        write_json_report(out, report)
+    return table
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke grid: small problems, few reps")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--out", default="",
+                    help="JSON report path ('' to skip)")
+    args = ap.parse_args(argv)
+    reps = args.reps if args.reps is not None else (2 if args.quick else 5)
+    run(reps=reps, iters=args.iters, quick=args.quick, out=args.out or None)
 
 
 if __name__ == "__main__":
-    run()
+    main()

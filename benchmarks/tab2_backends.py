@@ -3,13 +3,18 @@ inputs — demonstrating that no backend wins everywhere (the reason the
 harness registry supports per-platform selection and autotuning).
 
 This sweep doubles as the autotuner's external measurement pass: the
-steady-state timings it collects are recorded into the persistent autotune
-cache (``repro.core.autotune``), so a later ``lilac.compile(fn,
-mode="host", policy="autotune")`` in ANY process warm-starts from the
-sweep instead of re-timing.  The JSON report compares the tuned selection against the static
-per-platform default on every (problem, context) cell; because the tuned
-pick is the argmin of the same measurements, it is never slower than the
-default in the report — the Table 2 "always pick the right backend" win.
+steady-state timings it collects — kernel AND measured conversion-path
+(marshal) seconds — are recorded into the persistent autotune cache
+(``repro.core.autotune``), so a later ``lilac.compile(fn, mode="host",
+policy="autotune")`` in ANY process warm-starts from the sweep instead of
+re-timing.  The JSON report compares the tuned selection against the
+static per-platform default on every (problem, context) cell; because the
+tuned pick is the argmin of the same measurements, it is never slower than
+the default in the report — the Table 2 "always pick the right backend"
+win.  It also compares marshal-aware tuning (winner = argmin of kernel +
+repack/reuse, the steady-state amortized cost) against the kernel-only
+argmin: at the declared call frequency the marshal-aware pick's end-to-end
+cost is never worse.
 
 CLI:
     python benchmarks/tab2_backends.py [--quick] [--reps N] [--out PATH]
@@ -69,6 +74,7 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
                          reps=reps)
         row = {}
         abs_t = {"steady": {}, "cold": {}}
+        marshal_t = {}
         tune_match = None
         for backend in BACKENDS:
             # steady and cold fail independently: a cold-path exception
@@ -86,6 +92,15 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
                     # it keys the same autotune signature that a later
                     # policy="autotune" call will compute from live values.
                     tune_match = acc.last_selections[0][0]
+                # measured conversion-path seconds for this backend's
+                # marshal clauses (0.0 for repack-free backends)
+                try:
+                    h = REGISTRY.get(tune_match.computation
+                                     if tune_match else "spmv_csr", backend)
+                    marshal_t[backend] = acc.cache.estimate_marshal_seconds(
+                        h.marshal)
+                except Exception:
+                    marshal_t[backend] = 0.0
             except Exception:
                 row[(backend, "steady")] = float("nan")
                 row[(backend, "cold")] = float("nan")
@@ -124,13 +139,38 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
                 "tuned_never_slower": bool(t_tuned <= t_default)
                                       if t_default == t_default else True,
             }
-        # Seed the persistent autotune cache from the steady-state sweep:
-        # this run IS the measurement, so a later policy="autotune" process
-        # selects the winner here with zero re-timing.
+        # Marshal-aware vs kernel-only tuning on the steady context: the
+        # amortized cost (kernel + repack/reuse at the declared call
+        # frequency) of the marshal-aware argmin is, by construction, never
+        # worse than the kernel-only argmin's — surfaced per problem so the
+        # acceptance gate can assert it.
+        if abs_t["steady"]:
+            from repro.core.autotune import Autotuner
+            reuse = lilac.MarshalPolicy().reuse
+            amort = Autotuner.amortized(abs_t["steady"], marshal_t, reuse)
+            kernel_winner = min(abs_t["steady"], key=abs_t["steady"].get)
+            marshal_winner = min(amort, key=amort.get)
+            prob_report["marshal_aware"] = {
+                "reuse": reuse,
+                "marshal_s": marshal_t,
+                "amortized_s": amort,
+                "tuned_kernel_only": kernel_winner,
+                "tuned_with_marshal_cost": marshal_winner,
+                "never_slower": bool(
+                    amort[marshal_winner] <= amort[kernel_winner]),
+            }
+            emit(f"tab2.{prob_name}.marshal_aware", amort[marshal_winner],
+                 f"kernel_only={kernel_winner} "
+                 f"with_marshal_cost={marshal_winner}")
+        # Seed the persistent autotune cache from the steady-state sweep
+        # (kernel + marshal measurements): this run IS the measurement, so
+        # a later policy="autotune" process selects the amortized winner
+        # here with zero re-timing.
         if tune_match is not None and abs_t["steady"]:
             m = tune_match
             tuned = tuner.record_external(m.computation, m.format, plat,
-                                          "host", m.binding, abs_t["steady"])
+                                          "host", m.binding, abs_t["steady"],
+                                          marshal_s=marshal_t, reuse=reuse)
             prob_report["autotune_signature"] = signature_of(
                 m.computation, m.format, plat, m.binding)
             prob_report["autotune_recorded"] = tuned
@@ -142,6 +182,9 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
     report["tuned_never_slower_everywhere"] = all(
         c["tuned_never_slower"]
         for p in report["problems"].values() for c in p["contexts"].values())
+    report["tuned_with_marshal_cost_never_slower_everywhere"] = all(
+        p.get("marshal_aware", {}).get("never_slower", True)
+        for p in report["problems"].values())
     # End-to-end proof that the cache is live: a fresh autotune-policy pass
     # over the last problem must select from the cache without re-timing.
     timing_before = tuner.stats.timing_calls

@@ -13,7 +13,10 @@ from repro.core.autotune import Autotuner, AutotuneCache, signature_of
 from repro.core.detect import Detector, DetectionReport, Match, default_detector
 from repro.core.harness import (REGISTRY, CallCtx, DuplicateHarnessError,
                                 Harness, HarnessRegistry)
-from repro.core.marshal import MarshalingCache, ReadObject, TrackedArray, fingerprint
+from repro.core.marshal import (FORMATS, GRAPH, SOURCES, ConversionEdge,
+                                ConversionGraph, DataPlane, MarshalingCache,
+                                MarshalPolicy, ReadObject, SparseFormat,
+                                TrackedArray, fingerprint)
 from repro.core.pass_manager import (CompileOptions, LilacDeprecationWarning,
                                      LilacFunction, compile, lilac_accelerate,
                                      lilac_optimize)
@@ -29,7 +32,9 @@ __all__ = [
     "Detector", "DetectionReport", "Match", "default_detector",
     "REGISTRY", "CallCtx", "DuplicateHarnessError", "Harness",
     "HarnessRegistry",
-    "MarshalingCache", "ReadObject", "TrackedArray", "fingerprint",
+    "MarshalingCache", "DataPlane", "MarshalPolicy", "SparseFormat",
+    "ConversionEdge", "ConversionGraph", "FORMATS", "GRAPH", "SOURCES",
+    "ReadObject", "TrackedArray", "fingerprint",
     "CompileOptions", "LilacDeprecationWarning", "LilacFunction", "compile",
     "lilac_accelerate", "lilac_optimize", "spec", "what_lang",
 ]

@@ -23,6 +23,16 @@ module is the persistent half of that story:
   the winner, and persists it.  Under budget — or when measurement is
   impossible — it falls back to the per-platform default.
 
+Winner selection is **repack-amortized** (schema 2): for host-mode
+candidates with declared marshal clauses, the measured steady-state kernel
+time is combined with the data plane's measured conversion-path cost at
+the declared call frequency (``MarshalPolicy.reuse`` — expected calls per
+matrix change), so a backend with a blazing kernel but a ruinous repack
+only wins when the repack actually amortizes.  Schema-1 cache files are
+migrated on load: their kernel-only records stay valid for marshal-free
+candidate sets and are re-measured (not silently trusted) whenever a
+marshaling harness is in play — no stale winners.
+
 Environment knobs:
 
   LILAC_AUTOTUNE_CACHE    cache file path (default ~/.cache/lilac/autotune.json)
@@ -46,7 +56,7 @@ try:  # POSIX advisory locking for concurrent tuners; harmless to lose.
 except ImportError:  # pragma: no cover - non-POSIX
     fcntl = None
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 _ENV_PATH = "LILAC_AUTOTUNE_CACHE"
 _ENV_BUDGET = "LILAC_AUTOTUNE_BUDGET"
 _ENV_DISABLE = "LILAC_AUTOTUNE_DISABLE"
@@ -149,6 +159,8 @@ class TuneStats:
     stores: int = 0
     fallbacks: int = 0         # budget/measurability forced a default
     invalidations: int = 0     # on-disk entries dropped (version/fingerprint)
+    migrations: int = 0        # schema-1 entries migrated to schema 2
+    remeasures: int = 0        # kernel-only records re-tuned (marshal-aware)
     save_errors: int = 0       # persistence failed (unwritable path)
 
     def as_dict(self) -> Dict[str, int]:
@@ -162,11 +174,21 @@ class TuneStats:
 class AutotuneCache:
     """Versioned JSON store of tuning decisions.
 
-    Layout::
+    Layout (schema 2)::
 
-        {"schema": 1, "registry": "<fingerprint>",
-         "entries": {"<sig>": {"<mode>": {"harness": ..., "best_s": ...,
-                                          "timings": {...}}}}}
+        {"schema": 2, "registry": "<fingerprint>",
+         "entries": {"<sig>": {"<mode>": {
+             "harness": ..., "best_s": ..., "timings": {...},
+             "marshal_s": {...}, "reuse": 100.0, "amortized_s": {...},
+             "cost_model": "amortized" | "kernel_only"}}}}
+
+    ``timings`` are steady-state kernel seconds; ``marshal_s`` the measured
+    conversion-path seconds per candidate; ``amortized_s`` their
+    combination at the declared call frequency (``reuse``), which is what
+    the winner minimizes.  Schema-1 files are migrated in place on load:
+    records become ``cost_model: "kernel_only"`` (their winner predates
+    marshal-aware selection) and are re-measured instead of served when a
+    marshaling candidate is present.
 
     Writes are atomic (tempfile in the same directory + ``os.replace``) and
     merge-on-save under an advisory lock, so concurrent tuners never
@@ -183,20 +205,49 @@ class AutotuneCache:
 
     # -- disk ----------------------------------------------------------------
 
+    def _migrate_v1(self, entries: Dict[str, Dict[str, Any]]
+                    ) -> Dict[str, Dict[str, Any]]:
+        """Schema 1 -> 2: keep the measured kernel timings (they are still
+        valid measurements) but mark records ``kernel_only`` so the tuner
+        re-measures — instead of serving a potentially stale winner —
+        whenever marshal-aware selection would change the answer."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for sig, modes in entries.items():
+            if not isinstance(modes, dict):
+                continue
+            new_modes = {}
+            for mode, rec in modes.items():
+                if not isinstance(rec, dict) or "harness" not in rec:
+                    continue
+                rec = dict(rec)
+                rec.setdefault("cost_model", "kernel_only")
+                rec.setdefault("marshal_s", {})
+                rec.setdefault("amortized_s", dict(rec.get("timings", {})))
+                new_modes[mode] = rec
+                self.stats.migrations += 1
+            if new_modes:
+                out[sig] = new_modes
+        return out
+
     def _read_disk(self) -> Dict[str, Dict[str, Any]]:
         try:
             with open(self.path, "r", encoding="utf-8") as f:
                 doc = json.load(f)
         except (OSError, json.JSONDecodeError):
             return {}
-        if not isinstance(doc, dict) or doc.get("schema") != SCHEMA_VERSION:
+        schema = doc.get("schema") if isinstance(doc, dict) else None
+        if not isinstance(doc, dict) or schema not in (1, SCHEMA_VERSION):
             self.stats.invalidations += 1
             return {}
         if doc.get("registry") != self.registry_fingerprint:
             self.stats.invalidations += 1
             return {}
         entries = doc.get("entries", {})
-        return entries if isinstance(entries, dict) else {}
+        if not isinstance(entries, dict):
+            return {}
+        if schema == 1:
+            entries = self._migrate_v1(entries)
+        return entries
 
     def load(self) -> "AutotuneCache":
         """Warm-start: merge on-disk entries under the in-memory ones."""
@@ -430,11 +481,47 @@ class Autotuner:
             best = min(best, time.perf_counter() - t0)
         return best
 
+    @staticmethod
+    def _marshal_cost(h, ctx) -> float:
+        """Measured conversion-path seconds for a harness's declared
+        marshal clauses (0.0 for marshal-free harnesses or caches that
+        don't track costs).  Queried AFTER timing, when the warmup call has
+        populated the data plane's edge-cost EWMAs."""
+        clauses = getattr(h, "marshal", ()) or ()
+        cache = getattr(ctx, "cache", None)
+        if not clauses or cache is None:
+            return 0.0
+        est = getattr(cache, "estimate_marshal_seconds", None)
+        if est is None:
+            return 0.0
+        try:
+            return float(est(clauses))
+        except Exception:
+            return 0.0
+
+    @staticmethod
+    def _reuse(ctx) -> float:
+        """Declared call frequency (calls per matrix change) from the data
+        plane's MarshalPolicy; the amortization rate for repack cost."""
+        policy = getattr(getattr(ctx, "cache", None), "policy", None)
+        reuse = getattr(policy, "reuse", None)
+        return float(reuse) if reuse else 100.0
+
+    @staticmethod
+    def amortized(timings: Dict[str, float], marshal_s: Dict[str, float],
+                  reuse: float) -> Dict[str, float]:
+        """Steady-state repack-amortized cost per candidate: kernel seconds
+        plus the conversion cost spread over ``reuse`` calls."""
+        return {n: t + marshal_s.get(n, 0.0) / max(reuse, 1.0)
+                for n, t in timings.items()}
+
     def measure(self, cands: Sequence[Any], binding: Dict[str, Any],
                 ctx, mode: str,
                 default_name: Optional[str] = None
-                ) -> Tuple[Optional[str], Dict[str, float]]:
-        """Time up to budget candidates; return (winner_name, timings)."""
+                ) -> Tuple[Optional[str], Dict[str, float], Dict[str, float]]:
+        """Time up to budget candidates; returns (winner_name, kernel
+        timings, marshal-path seconds).  The winner minimizes the
+        repack-amortized cost, not raw kernel time."""
         import jax
 
         ranked = sorted(
@@ -449,8 +536,9 @@ class Autotuner:
             operands = (dict(binding) if concrete
                         else synthesize_operands(binding))
             if operands is None:
-                return None, {}
+                return None, {}, {}
         timings: Dict[str, float] = {}
+        marshal_s: Dict[str, float] = {}
         for h in ranked:
             try:
                 self.stats.timing_calls += 1
@@ -458,11 +546,13 @@ class Autotuner:
                     timings[h.name] = self._time_trace(h, ctx, operands)
                 else:
                     timings[h.name] = self._time_host(h, binding, ctx)
+                    marshal_s[h.name] = self._marshal_cost(h, ctx)
             except Exception:
                 continue
         if not timings:
-            return None, {}
-        return min(timings, key=timings.get), timings
+            return None, {}, {}
+        amort = self.amortized(timings, marshal_s, self._reuse(ctx))
+        return min(amort, key=amort.get), timings, marshal_s
 
     # -- selection -----------------------------------------------------------
 
@@ -478,21 +568,44 @@ class Autotuner:
             return None
         by_name = {h.name: h for h in cands}
         sig = signature_of(comp, fmt, platform, binding)
+        any_marshal = any(getattr(h, "marshal", ()) for h in cands)
 
         if not autotune_disabled():
             disk_before = self.cache.stats.disk_hits
             rec = self.cache.get(sig, mode)
             if rec is not None and rec.get("harness") in by_name:
-                # the cache's own stats know whether this get had to read
-                # the file; mirror that classification here
-                src = ("disk" if self.cache.stats.disk_hits > disk_before
-                       else "memory")
-                if src == "memory":
-                    self.stats.memory_hits += 1
+                # a migrated (schema-1, kernel-only) winner predates
+                # marshal-aware selection: when a marshaling candidate is
+                # in play the amortized argmin can differ, so re-measure
+                # instead of serving a potentially stale winner
+                if (rec.get("cost_model") == "kernel_only" and any_marshal
+                        and not autotune_disabled() and self._budget() > 0):
+                    self.stats.remeasures += 1
                 else:
-                    self.stats.disk_hits += 1
-                self.last_decision = Decision(rec["harness"], src, sig)
-                return by_name[rec["harness"]]
+                    # the record stores the raw kernel + marshal
+                    # measurements, so a DIFFERENT declared call frequency
+                    # re-derives its winner arithmetically — zero re-timing
+                    name = rec["harness"]
+                    reuse = self._reuse(ctx)
+                    timings = rec.get("timings") or {}
+                    if (rec.get("cost_model") == "amortized" and timings
+                            and rec.get("reuse") not in (None, reuse)):
+                        amort = self.amortized(
+                            {n: t for n, t in timings.items()
+                             if n in by_name},
+                            rec.get("marshal_s") or {}, reuse)
+                        if amort:
+                            name = min(amort, key=amort.get)
+                    # the cache's own stats know whether this get had to
+                    # read the file; mirror that classification here
+                    src = ("disk" if self.cache.stats.disk_hits > disk_before
+                           else "memory")
+                    if src == "memory":
+                        self.stats.memory_hits += 1
+                    else:
+                        self.stats.disk_hits += 1
+                    self.last_decision = Decision(name, src, sig)
+                    return by_name[name]
 
         if autotune_disabled() or self._budget() <= 0:
             self.stats.fallbacks += 1
@@ -501,16 +614,22 @@ class Autotuner:
             return None
 
         self.stats.misses += 1
-        winner, timings = self.measure(cands, binding, ctx, mode,
-                                       default_name=default_name)
+        winner, timings, marshal_s = self.measure(
+            cands, binding, ctx, mode, default_name=default_name)
         if winner is None:
             self.stats.fallbacks += 1
             self.last_decision = Decision(default_name or cands[0].name,
                                           "fallback", sig)
             return None
+        reuse = self._reuse(ctx)
+        amort = self.amortized(timings, marshal_s, reuse)
         record = {"harness": winner,
                   "best_s": timings[winner],
                   "timings": timings,
+                  "marshal_s": marshal_s,
+                  "reuse": reuse,
+                  "amortized_s": amort,
+                  "cost_model": "amortized",
                   "platform": platform,
                   "format": fmt}
         self.cache.put(sig, mode, record, persist=True)
@@ -520,16 +639,28 @@ class Autotuner:
 
     def record_external(self, comp: str, fmt: str, platform: str, mode: str,
                         binding: Dict[str, Any],
-                        timings: Dict[str, float]) -> str:
+                        timings: Dict[str, float],
+                        marshal_s: Optional[Dict[str, float]] = None,
+                        reuse: float = 100.0) -> str:
         """Seed the persistent cache from externally measured timings
-        (e.g. a benchmark sweep acting as the tuner).  Returns the winner."""
+        (e.g. a benchmark sweep acting as the tuner).  ``marshal_s`` (per
+        candidate conversion-path seconds) makes the recorded winner the
+        repack-amortized argmin at the declared ``reuse`` frequency; without
+        it the record is kernel-only.  Returns the winner."""
         if not timings:
             raise ValueError("record_external needs at least one timing")
         sig = signature_of(comp, fmt, platform, binding)
-        winner = min(timings, key=timings.get)
+        marshal_s = dict(marshal_s or {})
+        amort = self.amortized(timings, marshal_s, reuse)
+        winner = min(amort, key=amort.get)
         self.cache.put(sig, mode, {"harness": winner,
                                    "best_s": timings[winner],
                                    "timings": dict(timings),
+                                   "marshal_s": marshal_s,
+                                   "reuse": reuse,
+                                   "amortized_s": amort,
+                                   "cost_model": ("amortized" if marshal_s
+                                                  else "kernel_only"),
                                    "platform": platform,
                                    "format": fmt}, persist=True)
         self.stats.stores += 1

@@ -40,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.marshal import MarshalingCache
+from repro.core.marshal import DataPlane, MarshalingCache
 
 Binding = Dict[str, Any]
 
@@ -52,7 +52,8 @@ class DuplicateHarnessError(ValueError):
 @dataclasses.dataclass
 class CallCtx:
     mode: str                      # 'trace' | 'host'
-    cache: Optional[MarshalingCache]
+    cache: Optional[MarshalingCache]   # usually a DataPlane (plan-level,
+                                       # shared across a call's harnesses)
     format: str                    # match format: CSR/COO/ELL/JDS/DOT/...
     platform: str = "cpu"
 
@@ -66,6 +67,11 @@ class Harness:
     platforms: Tuple[str, ...] = ("cpu", "tpu")
     formats: Tuple[str, ...] = ()                 # () = any
     persistent: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # declared marshal clauses (what_lang.MarshalClause): the autotuner
+    # reads these to fold repack cost into winner selection; NOT part of
+    # the registry fingerprint (formats/platforms/jit_safe identify the
+    # harness, marshaling is an implementation detail of its data plane)
+    marshal: Tuple[Any, ...] = ()
     setup: Optional[Callable] = None              # BeforeFirstExecution
     teardown: Optional[Callable] = None           # AfterLastExecution
     # Shared mutable {"up": bool} when one HARNESS block implements several
@@ -197,7 +203,7 @@ class HarnessRegistry:
             # winner, measured once, reused across calls AND processes; in
             # trace mode the winner is pinned at first lowering.
             if ctx is None:
-                ctx = CallCtx(mode=mode, cache=MarshalingCache(), format=fmt,
+                ctx = CallCtx(mode=mode, cache=DataPlane(), format=fmt,
                               platform=platform)
             h = self.autotuner.select(comp, fmt, platform, mode, cands,
                                       binding, ctx, default_name=dname)

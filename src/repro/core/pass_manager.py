@@ -34,7 +34,7 @@ import numpy as np
 
 from repro.core import detect as D
 from repro.core import harness as H
-from repro.core.marshal import MarshalingCache
+from repro.core.marshal import DataPlane, MarshalingCache, MarshalPolicy
 from repro.core.rewrite import run_rewritten
 
 
@@ -68,6 +68,7 @@ class LilacFunction:
                  detector: Optional[D.Detector] = None,
                  platform: Optional[str] = None,
                  cache: Optional[MarshalingCache] = None,
+                 marshal_policy=None,
                  enabled: bool = True):
         assert mode in ("trace", "host")
         self.fn = fn
@@ -76,7 +77,15 @@ class LilacFunction:
         self.registry = registry or H.REGISTRY
         self.detector = detector or D.default_detector()
         self.platform = platform or jax.default_backend()
-        self.cache = cache or MarshalingCache()
+        self.marshal_policy = MarshalPolicy.parse(marshal_policy)
+        if cache is not None:
+            # caller-supplied cache (possibly shared with other compiled
+            # functions: the cross-function plan-level sharing path)
+            self.cache = cache
+        elif self.marshal_policy.enabled:
+            self.cache = DataPlane(policy=self.marshal_policy)
+        else:
+            self.cache = None       # every call repacks (A/B baseline)
         self.enabled = enabled
         self._compiled: Dict[Tuple, CompiledEntry] = {}
         self.last_report: Optional[D.DetectionReport] = None
@@ -166,13 +175,23 @@ class CompileOptions:
     ``policy``    'default' | 'autotune' | an explicit harness name.
     ``platform``  target platform; None = ``jax.default_backend()``.
     ``enabled``   False runs the original computation (A/B baseline).
+    ``marshal_policy``  data-plane configuration: a
+                  :class:`~repro.core.marshal.MarshalPolicy`, or one of
+                  'shared' (default: plan-level DataPlane with the
+                  conversion graph), 'exact' (exact fingerprints), 'off'
+                  (no caching — every call repacks).  The policy's
+                  ``reuse`` is the declared call frequency the autotuner
+                  amortizes repack cost at.
     ``registry``/``detector``/``cache``  dependency injection for tests
-                  and benchmarks; None picks the global instances.
+                  and benchmarks; None picks the global instances.  Pass
+                  the same DataPlane as ``cache`` to several compiled
+                  functions to share marshaled buffers across them.
     """
     mode: str = "trace"
     policy: str = "default"
     platform: Optional[str] = None
     enabled: bool = True
+    marshal_policy: Optional[Any] = None
     registry: Optional[H.HarnessRegistry] = None
     detector: Optional[D.Detector] = None
     cache: Optional[MarshalingCache] = None
@@ -204,6 +223,7 @@ def compile(fn: Optional[Callable] = None, *,
     return LilacFunction(fn, mode=opts.mode, policy=opts.policy,
                          registry=opts.registry, detector=opts.detector,
                          platform=opts.platform, cache=opts.cache,
+                         marshal_policy=opts.marshal_policy,
                          enabled=opts.enabled)
 
 

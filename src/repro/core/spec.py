@@ -35,6 +35,7 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, List, Optional, Union
 
 from repro.core import harness as H
+from repro.core import marshal as M
 from repro.core import what_lang as W
 
 
@@ -88,23 +89,34 @@ def _resolve_key(binding: H.Binding, alternatives) -> Any:
 def _marshaled_fn(decl: W.HarnessDecl, body: Callable) -> Callable:
     """Generate the marshaling wrapper for a decl's repack clauses: each
     marshaled input is computed by its repack function, memoized in the
-    call's MarshalingCache on the fingerprints of the declared key arrays,
-    and passed to the body as a keyword argument."""
+    call's cache on the fingerprints of the declared key arrays, and passed
+    to the body as a keyword argument.
+
+    Clauses that declare ``from <src> to <dst>`` route through the shared
+    plan-level :class:`~repro.core.marshal.DataPlane`: the conversion graph
+    plans the cheapest path to ``dst`` (riding intermediates another
+    harness already cached), with the clause's repack function as the
+    fallback when no path exists."""
     clauses = decl.marshal
 
     def fn(binding: H.Binding, ctx: H.CallCtx):
         marshaled = {}
+        cache = ctx.cache if ctx is not None else None
         for cl in clauses:
             pack = REPACKS.get(cl.repack)
             if pack is None:
                 raise SpecError(
                     f"harness {decl.name!r}: unknown repack {cl.repack!r}")
             keys = tuple(_resolve_key(binding, alts) for alts in cl.keys)
-            if ctx is not None and ctx.cache is not None:
-                marshaled[cl.name] = ctx.cache.get(
-                    cl.repack, keys, lambda p=pack: p(binding))
-            else:
+            if cache is None:
                 marshaled[cl.name] = pack(binding)
+            elif cl.src and cl.dst and hasattr(cache, "ensure"):
+                marshaled[cl.name] = cache.ensure(
+                    cl.src, cl.dst, keys, binding,
+                    fallback=lambda p=pack: p(binding))
+            else:
+                marshaled[cl.name] = cache.get(
+                    cl.repack, keys, lambda p=pack: p(binding))
         return body(binding, ctx, **marshaled)
 
     fn.__name__ = getattr(body, "__name__", decl.name)
@@ -141,7 +153,7 @@ def build_harnesses(decl: W.HarnessDecl, body: Callable, *,
         H.Harness(decl.name, comp, fn, jit_safe=decl.jit_safe,
                   platforms=decl.platforms, formats=decl.formats,
                   persistent=persistent, setup=setup, teardown=teardown,
-                  lifecycle=lifecycle)
+                  lifecycle=lifecycle, marshal=decl.marshal)
         for comp in decl.implements
     ]
 
@@ -194,6 +206,22 @@ def register_spec(spec: Union[str, W.Spec], bodies: Dict[str, Callable], *,
                 raise SpecError(
                     f"HARNESS {decl.name!r}: unknown repack {cl.repack!r} "
                     f"(register it with @repack before the harness)")
+            # declared formats must resolve against the data plane so the
+            # conversion graph is built from specs, not hand-wiring
+            if cl.src is not None and cl.src not in M.SOURCES:
+                raise SpecError(
+                    f"HARNESS {decl.name!r}: unknown marshal source "
+                    f"{cl.src!r} (register it with register_source)")
+            if cl.dst is not None and cl.dst not in M.FORMATS:
+                raise SpecError(
+                    f"HARNESS {decl.name!r}: unknown marshal target format "
+                    f"{cl.dst!r} (register it with register_format)")
+            if cl.src is not None and cl.dst is not None:
+                start = M.SOURCES[cl.src].fmt
+                if M.GRAPH.full_path_cost(start, cl.dst) is None:
+                    raise SpecError(
+                        f"HARNESS {decl.name!r}: no conversion path "
+                        f"{cl.src}({start}) -> {cl.dst} in the graph")
         hs = build_harnesses(decl, body, hooks=hooks)
         for h in hs:
             key = (h.implements, h.name)
@@ -262,7 +290,69 @@ def harness(decl: Union[str, W.HarnessDecl], *,
 
 
 # ---------------------------------------------------------------------------
-# Builtin repacks (the format conversions the builtin spec texts name).
+# The builtin data plane: source loaders (binding -> format) and conversion
+# edges (format value -> format value).  Marshal clauses name these via
+# ``from <source> to <format>``; the legacy repack functions below remain as
+# single-hop fallbacks and as the reference implementations the property
+# tests compare planned paths against.
+# ---------------------------------------------------------------------------
+
+M.register_source("csr_binding", "CSR", H._binding_to_csr)
+M.register_source("csr_binding_mm", "CSR", H._binding_to_csr_spmm)
+
+
+@M.edge("CSR", "ELL8", name="csr_to_ell8")
+def _csr_to_ell8(csr):
+    from repro.sparse.convert import csr_to_ell
+    return csr_to_ell(csr)
+
+
+@M.edge("CSR", "ELL128", name="csr_to_ell128")
+def _csr_to_ell128(csr):
+    from repro.sparse.convert import csr_to_ell
+    return csr_to_ell(csr, lane=128)
+
+
+@M.edge("CSR", "DENSE", name="csr_todense")
+def _csr_todense(csr):
+    return csr.todense()
+
+
+@M.edge("CSR", "JDS", name="csr_to_jds")
+def _csr_to_jds(csr):
+    from repro.sparse.convert import csr_to_jds
+    return csr_to_jds(csr)
+
+
+def _dense_to_bcsr(dense, block_shape):
+    """Pad to block multiples and tile (csr_to_bcsr's second half, so
+    CSR->DENSE->BCSR* composes to exactly the legacy one-hop repack and
+    the DENSE intermediate is shareable with the jnp.dense harness)."""
+    import numpy as np
+
+    from repro.sparse.formats import bcsr_from_dense
+    d = np.asarray(dense)
+    bm, bn = block_shape
+    rows, cols = d.shape
+    pr = (-rows) % bm
+    pc = (-cols) % bn
+    if pr or pc:
+        d = np.pad(d, ((0, pr), (0, pc)))
+    return bcsr_from_dense(d, block_shape)
+
+
+@M.edge("DENSE", "BCSR8x128", name="dense_to_bcsr8x128")
+def _dense_to_bcsr8(dense):
+    return _dense_to_bcsr(dense, (8, 128))
+
+
+@M.edge("DENSE", "BCSR128x128", name="dense_to_bcsr128x128")
+def _dense_to_bcsr128(dense):
+    return _dense_to_bcsr(dense, (128, 128))
+
+
+# ---------------------------------------------------------------------------
+# Builtin repacks (single-hop fallbacks; also the graph-equivalence oracle).
 # ---------------------------------------------------------------------------
 
 @repack("ell_pack")

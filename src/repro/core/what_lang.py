@@ -14,7 +14,8 @@
               | formats <namelist> ;
               | default_for <namelist> ;
               | host_only ;
-              | marshal <name> = <name> ( <keylist> ) ;
+              | marshal <name> = <name> ( <keylist> )
+                    [ from <name> ] [ to <name> ] ;
               | persistent <namelist> ;
               | BeforeFirstExecution <name> ;
               | AfterLastExecution <name> ;
@@ -221,18 +222,32 @@ class Computation:
 
 @dataclasses.dataclass(frozen=True)
 class MarshalClause:
-    """``marshal <name> = <repack>(<keys>)``: the named input is produced by
-    the registered repack function, memoized in the marshaling cache on the
-    fingerprints of the key arrays (the mprotect analogue).  Each key may
-    list ``|``-separated alternatives; the first present in the binding is
-    used (e.g. ``rowstr|rowidx`` covers CSR and COO matches)."""
+    """``marshal <name> = <repack>(<keys>) [from <src>] [to <dst>]``: the
+    named input is produced by the registered repack function, memoized in
+    the marshaling cache on the fingerprints of the key arrays (the
+    mprotect analogue).  Each key may list ``|``-separated alternatives;
+    the first present in the binding is used (e.g. ``rowstr|rowidx``
+    covers CSR and COO matches).
+
+    ``from``/``to`` declare the repack's source loader and target format
+    (names in the data plane's SOURCES / FORMATS registries).  With both
+    present the conversion graph plans the repack as a *path* — sharing
+    cached intermediates with other harnesses — and the repack function
+    itself becomes the fallback when no path exists."""
     name: str
     repack: str
     keys: Tuple[Tuple[str, ...], ...]
+    src: Optional[str] = None
+    dst: Optional[str] = None
 
     def __str__(self):
         ks = ", ".join("|".join(alts) for alts in self.keys)
-        return f"marshal {self.name} = {self.repack}({ks});"
+        tail = ""
+        if self.src is not None:
+            tail += f" from {self.src}"
+        if self.dst is not None:
+            tail += f" to {self.dst}"
+        return f"marshal {self.name} = {self.repack}({ks}){tail};"
 
 
 _DEFAULT_PLATFORMS = ("cpu", "tpu")
@@ -552,7 +567,15 @@ class _Parser:
                 self.expect("op", "(")
                 keys = self.keylist()
                 self.expect("op", ")")
-                marshal.append(MarshalClause(mname, repack, keys))
+                src = dst = None
+                if self.peek() == ("name", "from"):
+                    self.next()
+                    src = self.expect("name")
+                if self.peek() == ("name", "to"):
+                    self.next()
+                    dst = self.expect("name")
+                marshal.append(MarshalClause(mname, repack, keys,
+                                             src=src, dst=dst))
             elif word == "persistent":
                 persistent = persistent + self.namelist()
             elif word == "BeforeFirstExecution":
@@ -620,17 +643,19 @@ HARNESS jnp.segment implements spmv_csr, spmv_coo
 HARNESS jnp.ell implements spmv_csr, spmv_coo
   formats CSR, COO;
   host_only;
-  marshal ell = ell_pack(a, colidx, rowstr|rowidx);
+  marshal ell = ell_pack(a, colidx, rowstr|rowidx) from csr_binding to ELL8;
 
 HARNESS jnp.bcsr implements spmv_csr, spmv_coo
   formats CSR, COO;
   host_only;
-  marshal bcsr = bcsr_pack(a, colidx, rowstr|rowidx);
+  marshal bcsr = bcsr_pack(a, colidx, rowstr|rowidx)
+      from csr_binding to BCSR8x128;
 
 HARNESS jnp.dense implements spmv_csr, spmv_coo
   formats CSR, COO;
   host_only;
-  marshal dense = densify(a, colidx, rowstr|rowidx);
+  marshal dense = densify(a, colidx, rowstr|rowidx)
+      from csr_binding to DENSE;
 """
 # delta[rowidx[j]] denotes the i==rowidx[j] indicator; the generated matcher
 # realizes it as the scatter-add-by-row skeleton (see detect.py).
@@ -668,7 +693,8 @@ HARNESS jnp.segment implements spmm_csr
 HARNESS jnp.bcsr implements spmm_csr
   formats CSR, COO;
   host_only;
-  marshal bcsr = bcsr_pack_mm(a, colidx, rowstr|rowidx);
+  marshal bcsr = bcsr_pack_mm(a, colidx, rowstr|rowidx)
+      from csr_binding_mm to BCSR8x128;
 """
 
 BUILTIN_SPECS["dotproduct"] = """

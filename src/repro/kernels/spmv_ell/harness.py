@@ -38,7 +38,8 @@ HARNESS pallas.ell implements spmv_csr, spmv_coo
   platforms tpu;
   formats CSR, COO;
   host_only;
-  marshal ell = ell_pack128(a, colidx, rowstr|rowidx);
+  marshal ell = ell_pack128(a, colidx, rowstr|rowidx)
+      from csr_binding to ELL128;
 """)
 def spmv_ell_pallas_host(b, ctx, *, ell):
     """CSR/COO match -> marshaled ELL repack -> Pallas slab kernel."""

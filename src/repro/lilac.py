@@ -30,7 +30,11 @@ Library implementers (spec + function = a new backend)::
 """
 from repro.core.harness import (REGISTRY, CallCtx, DuplicateHarnessError,
                                 Harness, HarnessRegistry)
-from repro.core.marshal import MarshalingCache, ReadObject, TrackedArray
+from repro.core.marshal import (FORMATS, GRAPH, SOURCES, ConversionEdge,
+                                ConversionGraph, DataPlane, MarshalingCache,
+                                MarshalPolicy, ReadObject, SparseFormat,
+                                TrackedArray, edge, register_format,
+                                register_source)
 from repro.core.pass_manager import (CompileOptions, LilacDeprecationWarning,
                                      LilacFunction, compile, lilac_accelerate,
                                      lilac_optimize)
@@ -54,6 +58,10 @@ __all__ = [
     # registry / runtime
     "REGISTRY", "Harness", "HarnessRegistry", "DuplicateHarnessError",
     "CallCtx", "MarshalingCache", "ReadObject", "TrackedArray",
+    # data plane
+    "DataPlane", "MarshalPolicy", "SparseFormat", "ConversionEdge",
+    "ConversionGraph", "FORMATS", "GRAPH", "SOURCES", "edge",
+    "register_format", "register_source",
     # deprecated shims
     "lilac_optimize", "lilac_accelerate", "LilacDeprecationWarning",
 ]

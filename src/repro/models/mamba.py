@@ -25,18 +25,43 @@ def mamba_spec(d: int, expand: int = 2, d_state: int = 16,
                dt_rank: int = 0) -> Dict[str, ParamSpec]:
     di = expand * d
     dt_rank = dt_rank or max(16, d // 16)
+    # out_proj is a residual-stream writer gated by y * SiLU(z): at unit
+    # init scale the block amplifies the residual ~4x per layer (16 layers
+    # -> |x| ~ 1e9 in fp32, where prefill-vs-decode program-shape
+    # reassociation noise flips predictions).  The GPT-2-style down-scaled
+    # residual projection keeps the stream O(10) at init.
     return {
         "in_proj": ParamSpec((d, 2 * di), ("embed", "mlp")),
         "conv_w": ParamSpec((CONV_K, di), (None, "mlp"), dtype=F32),
         "conv_b": ParamSpec((di,), ("mlp",), init="zeros", dtype=F32),
-        "wx_dbc": ParamSpec((di, dt_rank + 2 * d_state), ("mlp", None)),
+        # small init scale keeps the data-dependent (dt, B, C) projections
+        # near the reference Mamba operating point: dt = softplus(~0 +
+        # dt_bias) ~ dt_init instead of the softplus linear regime (dt~20,
+        # which drives |h| to ~1e5 and makes the C.h contraction cancel
+        # catastrophically).
+        "wx_dbc": ParamSpec((di, dt_rank + 2 * d_state), ("mlp", None),
+                            scale=0.1),
+        # Jamba §3 stabilization (HF JambaMambaMixer dt/b/c_layernorm):
+        # RMSNorm the data-dependent (dt, B, C) before the scan.  Without
+        # it, near-zero-dt channels act as integrators with ~1/dt gain and
+        # the state reaches 1e4..1e6, where the C.h contraction amplifies
+        # fp32 reassociation noise into prediction flips.
+        "dt_norm": ParamSpec((dt_rank,), (None,), init="ones", dtype=F32),
+        "b_norm": ParamSpec((d_state,), (None,), init="ones", dtype=F32),
+        "c_norm": ParamSpec((d_state,), (None,), init="ones", dtype=F32),
         "dt_proj": ParamSpec((dt_rank, di), (None, "mlp"), dtype=F32),
-        "dt_bias": ParamSpec((di,), ("mlp",), init="zeros", dtype=F32),
-        "a_log": ParamSpec((di, d_state), ("mlp", None), init="zeros",
+        "dt_bias": ParamSpec((di,), ("mlp",), init="dt_bias", scale=0.01,
+                             dtype=F32),
+        "a_log": ParamSpec((di, d_state), ("mlp", None), init="arange_log",
                            dtype=F32),
         "d_skip": ParamSpec((di,), ("mlp",), init="ones", dtype=F32),
-        "out_proj": ParamSpec((di, d), ("mlp", "embed")),
+        "out_proj": ParamSpec((di, d), ("mlp", "embed"), scale=0.125),
     }
+
+
+def _rms(x, eps: float = 1e-6):
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps)
 
 
 def _causal_conv(x, w, b, tail=None):
@@ -62,11 +87,12 @@ def mamba_block(p, x, state: Tuple, d_state: int = 16):
     xi, new_tail = _causal_conv(xi, p["conv_w"], p["conv_b"], conv_tail)
     xi = jax.nn.silu(xi.astype(F32)).astype(x.dtype)
     dbc = jnp.einsum("bse,ef->bsf", xi, p["wx_dbc"]).astype(F32)
+    dt_in = _rms(dbc[..., :dt_rank]) * p["dt_norm"]
     dt = jax.nn.softplus(
-        jnp.einsum("bsr,re->bse", dbc[..., :dt_rank], p["dt_proj"])
+        jnp.einsum("bsr,re->bse", dt_in, p["dt_proj"])
         + p["dt_bias"])                                         # (B,S,di)
-    Bm = dbc[..., dt_rank:dt_rank + d_state]                    # (B,S,N)
-    Cm = dbc[..., dt_rank + d_state:]                           # (B,S,N)
+    Bm = _rms(dbc[..., dt_rank:dt_rank + d_state]) * p["b_norm"]   # (B,S,N)
+    Cm = _rms(dbc[..., dt_rank + d_state:]) * p["c_norm"]          # (B,S,N)
     A = -jnp.exp(p["a_log"])                                    # (di,N)
     xf = xi.astype(F32)
 

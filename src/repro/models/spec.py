@@ -32,7 +32,7 @@ class ParamSpec:
     shape: Tuple[int, ...]
     axes: Tuple[Optional[str], ...]
     dtype: Any = jnp.bfloat16
-    init: str = "normal"     # normal | zeros | ones
+    init: str = "normal"     # normal | zeros | ones | arange_log | dt_bias
     scale: float = 1.0       # stddev multiplier for normal init
 
     def __post_init__(self):
@@ -178,6 +178,19 @@ def init_params(spec_tree, key: jax.Array):
             vals.append(jnp.asarray(np.zeros(s.shape), dtype=s.dtype))
         elif s.init == "ones":
             vals.append(jnp.asarray(np.ones(s.shape), dtype=s.dtype))
+        elif s.init == "arange_log":
+            # Mamba S4D-real init: A_log[..., n] = log(n+1), so the decay
+            # spectrum A = -[1..N] is spread per state dim.  Keeps |h|
+            # bounded; init="zeros" (A = -1 uniformly) lets the selective
+            # scan state reach ~1e7 where fp32 ulp noise flips predictions.
+            row = np.log(np.arange(1, s.shape[-1] + 1))
+            vals.append(jnp.asarray(
+                np.broadcast_to(row, s.shape).copy(), dtype=s.dtype))
+        elif s.init == "dt_bias":
+            # softplus^-1(dt_init): softplus(dt_bias) == dt_init == scale,
+            # the reference Mamba timestep floor (dt in [1e-3, 1e-1]).
+            val = np.log(np.expm1(s.scale))
+            vals.append(jnp.asarray(np.full(s.shape, val), dtype=s.dtype))
         else:
             fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.shape[-1], 1)
             std = s.scale / np.sqrt(max(fan_in, 1))
