@@ -29,6 +29,22 @@ def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
 
 
+def sweep(variants: Dict[str, Callable], *args, reps: int = 20,
+          warmup: int = 3) -> Dict[str, float]:
+    """Median steady-state seconds per named variant — the timing loop
+    previously copy-pasted across tab2/fig18, shared by the backend sweeps
+    and the per-schedule kernel sweeps.  A variant that raises records NaN
+    instead of killing the sweep (mirrors the autotuner's variant
+    elimination)."""
+    out: Dict[str, float] = {}
+    for name, fn in variants.items():
+        try:
+            out[name] = timeit(fn, *args, reps=reps, warmup=warmup)
+        except Exception:
+            out[name] = float("nan")
+    return out
+
+
 def naive_spmv_fn(rows: int, nnz: int):
     def naive(val, col, row_ptr, v):
         row = jnp.repeat(jnp.arange(rows, dtype=jnp.int32),

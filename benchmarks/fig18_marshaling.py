@@ -27,8 +27,8 @@ import argparse
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import (emit, naive_spmv_fn, problem_suite, timeit,
-                               vec_for, write_json_report)
+from benchmarks.common import (emit, naive_spmv_fn, problem_suite, sweep,
+                               timeit, vec_for, write_json_report)
 from repro import lilac
 
 # jnp.dense primes the DENSE intermediate that jnp.bcsr's planned
@@ -69,11 +69,13 @@ def run(reps: int = 5, iters: int = 10, quick: bool = False,
         # -- classic Fig. 18: cached vs re-packed-every-call ----------------
         for backend in BACKENDS:
             acc = lilac.compile(naive, mode="host", policy=backend)
-            t_marshal = timeit(lambda: _iterate(acc, csr, vec, iters),
-                               reps=reps, warmup=1)
-            t_naive_m = timeit(lambda: _iterate(acc, csr, vec, iters,
-                                                clear=True),
-                               reps=reps, warmup=1)
+            pair = sweep({
+                "cached": lambda: _iterate(acc, csr, vec, iters),
+                "repack_every_call": lambda: _iterate(acc, csr, vec, iters,
+                                                      clear=True),
+            }, reps=reps, warmup=1)
+            t_marshal = pair["cached"]
+            t_naive_m = pair["repack_every_call"]
             win = t_naive_m / t_marshal
             table[(prob_name, backend)] = win
             st = acc.cache.stats
@@ -81,6 +83,10 @@ def run(reps: int = 5, iters: int = 10, quick: bool = False,
                 "t_cached_s": t_marshal,
                 "t_repack_every_call_s": t_naive_m,
                 "marshaling_win": win,
+                # which kernel-schedule variant this backend's plan ran
+                # with (None: default / untuned — the jnp.* backends)
+                "schedule": (acc.last_schedules[0]
+                             if acc.last_schedules else None),
                 "cache": {"hits": st.hits, "misses": st.misses,
                           "bytes_avoided": st.bytes_avoided,
                           "seconds_avoided": st.recompute_seconds_avoided},

@@ -16,12 +16,22 @@ repack/reuse, the steady-state amortized cost) against the kernel-only
 argmin: at the declared call frequency the marshal-aware pick's end-to-end
 cost is never worse.
 
+Since schema 3 the sweep also covers *kernel schedules*: for each
+tune-declaring harness it times every declared schedule variant (capped by
+``--max-variants``) through one shared data plane, reports the swept-best
+vs the default (fixed-constant) schedule, gates
+``tuned_schedule_never_slower_than_default_schedule``, and measures the
+fused-epilogue variant (spmv+bias+relu in one harness call) against the
+unfused harness-then-activation realization.
+
 CLI:
     python benchmarks/tab2_backends.py [--quick] [--reps N] [--out PATH]
+                                       [--max-variants N]
 
 ``--quick`` runs the small CI smoke grid and is what the bench-smoke CI job
 executes; ``--out`` (default BENCH_tab2_backends.json) is uploaded as the
-perf-trajectory artifact.
+perf-trajectory artifact.  ``--max-variants`` caps each harness's swept
+schedule family so the smoke job stays inside its time budget.
 """
 from __future__ import annotations
 
@@ -29,20 +39,156 @@ import argparse
 import platform as _platform
 
 import jax
+import numpy as np
 
-from benchmarks.common import (emit, naive_spmv_fn, problem_suite, timeit,
-                               vec_for, write_json_report)
+from benchmarks.common import (emit, naive_spmv_fn, problem_suite, sweep,
+                               timeit, vec_for, write_json_report)
 from repro import lilac
 from repro.core import REGISTRY, signature_of
+from repro.core.autotune import schedule_key
+from repro.core.harness import CallCtx
+from repro.core.marshal import DataPlane
+from repro.core.rewrite import apply_epilogue
 
 BACKENDS = ["jnp.segment", "jnp.ell", "jnp.bcsr", "jnp.dense"]
+
+# tune-declaring harnesses swept per problem (by explicit name: the Pallas
+# backends are TPU-targeted and run the interpreter on CPU — their
+# *relative* schedule ranking is still meaningful and is what the gate
+# checks)
+SCHEDULE_HARNESSES = ["pallas.ell"]
 
 
 def _default_backend(plat: str) -> str:
     return REGISTRY.default_name("spmv_csr", plat) or BACKENDS[0]
 
 
-def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
+def _csr_binding(csr, vec) -> dict:
+    return {"a": csr.val, "colidx": csr.col_ind, "rowstr": csr.row_ptr,
+            "iv": vec, "rows": csr.rows, "nnz": csr.nnz}
+
+
+def schedule_sweep(csr, vec, harness_name: str, reps: int,
+                   max_variants: int, plat: str) -> dict | None:
+    """Steady-state time every schedule variant of one harness on one
+    problem, through a single shared DataPlane (variants of a harness
+    share its marshaled format, so the repack is paid once)."""
+    try:
+        h = REGISTRY.get("spmv_csr", harness_name)
+    except KeyError:
+        return None
+    scheds = list(h.schedules) or [None]
+    if max_variants > 0:
+        scheds = scheds[:max_variants]
+    binding = _csr_binding(csr, vec)
+    ctx = CallCtx(mode="host", cache=DataPlane(), format="CSR",
+                  platform=plat)
+
+    def call(s):
+        def fn():
+            ctx.schedule = s
+            return h(binding, ctx)
+        return fn
+
+    by_key = {schedule_key(s): s for s in scheds}
+    times = sweep({k: call(s) for k, s in by_key.items()},
+                  reps=reps, warmup=1)
+    default_key = schedule_key(scheds[0] if scheds[0] is not None else None)
+    valid = {k: t for k, t in times.items() if t == t}
+    if not valid or default_key not in valid:
+        return None
+    best_key = min(valid, key=valid.get)
+    t_default, t_best = valid[default_key], valid[best_key]
+
+    # Drive the REAL autotuner (successive halving, isolated cache) over
+    # the same family and grade the schedule it PINS against the default
+    # in the exhaustive table above.  The exhaustive argmin satisfies
+    # best <= default by construction; the tuner's pick does not — a sweep
+    # regression (winner ignoring its measurements, stale pin) fails this
+    # gate.  10% tolerance absorbs noise between the two measurement
+    # passes.
+    import pathlib
+    import tempfile
+
+    from repro.core.autotune import Autotuner, AutotuneCache
+    tuner = Autotuner(
+        registry_fingerprint="tab2-schedule-sweep",
+        cache=AutotuneCache(
+            pathlib.Path(tempfile.mkdtemp(prefix="tab2-autotune-"))
+            / "autotune.json"),
+        reps=2, max_variants=max_variants or None)
+    tctx = CallCtx(mode="host", cache=ctx.cache, format="CSR",
+                   platform=plat)
+    sel = tuner.select("spmv_csr", "CSR", plat, "host", [h], binding, tctx,
+                       default_name=harness_name)
+    pinned = tuner.last_decision.schedule if sel is not None else None
+    pinned_key = schedule_key(pinned)
+    t_pinned = valid.get(pinned_key, float("nan"))
+    gate = bool(t_pinned <= t_default * 1.10) if t_pinned == t_pinned \
+        else False
+
+    result = {
+        "harness": harness_name,
+        "variant_s": times,
+        "n_variants": len(scheds),
+        "n_variants_declared": max(len(h.schedules), 1),
+        "default_schedule": default_key,
+        "t_default_schedule_s": t_default,
+        "best_schedule": best_key,
+        "t_best_schedule_s": t_best,
+        "swept_vs_default_schedule": t_default / t_best,
+        "autotuner_pinned_schedule": pinned_key,
+        "t_autotuner_pinned_s": t_pinned,
+        "schedule_gate_tolerance": 1.10,
+        "tuned_schedule_never_slower_than_default_schedule": gate,
+    }
+
+    # fused-epilogue margin, measured on the *direct ELL* entry point
+    # where the epilogue truly fuses in-register (one kernel call, single
+    # output store) — the unfused realization is the same kernel followed
+    # by eager bias-add + relu, paying extra output round-trips.  (The
+    # CSR entry point applies the epilogue post-permutation, which is
+    # body-level and wouldn't isolate the fusion win.)  Both sides run the
+    # problem's swept-best schedule — the configuration the autotuner
+    # would pin.
+    try:
+        h_ell = REGISTRY.get("spmv_ell", harness_name)
+    except KeyError:
+        h_ell = None
+    if h_ell is not None and getattr(h_ell, "fuse_epilogue", False):
+        from repro.sparse import ell_from_csr
+        ell = ell_from_csr(csr)
+        vec_full = vec_for(csr)
+        ell_binding = {"val": ell.val, "col_ind": ell.col,
+                       "vector": vec_full, "rows": csr.rows}
+        bias = vec_for(csr)[: ell.val.shape[0]]
+        fused_binding = dict(ell_binding)
+        fused_binding["bias"] = bias
+        best_sched = by_key.get(best_key)
+        plain_ctx = CallCtx(mode="host", cache=ctx.cache, format="ELL",
+                            platform=plat, schedule=best_sched)
+        fused_ctx = CallCtx(mode="host", cache=ctx.cache, format="ELL",
+                            platform=plat, schedule=best_sched,
+                            epilogue="relu")
+        pair = sweep({
+            "fused": lambda: h_ell(fused_binding, fused_ctx),
+            "unfused": lambda: apply_epilogue(
+                h_ell(ell_binding, plain_ctx), bias, "relu"),
+        }, reps=max(8, reps), warmup=2)
+        if all(t == t for t in pair.values()):
+            result["fused_epilogue"] = {
+                "computation": "spmv_ell",
+                "epilogue": "relu",
+                "schedule": best_key,
+                "t_fused_s": pair["fused"],
+                "t_unfused_s": pair["unfused"],
+                "fused_vs_unfused": pair["unfused"] / pair["fused"],
+            }
+    return result
+
+
+def run(reps: int = 10, quick: bool = False, out: str | None = None,
+        max_variants: int = 0) -> dict:
     """Two calling contexts per (problem, backend):
     steady — matrix reused across calls (marshaling amortized; the
              PageRank/CG regime), and
@@ -64,7 +210,9 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
         "backends": BACKENDS,
         "default_backend": _default_backend(plat),
         "autotune_cache": str(tuner.cache.path),
+        "max_variants": max_variants,
         "problems": {},
+        "schedule_sweeps": {},
     }
     for prob_name, csr in suite.items():
         naive = naive_spmv_fn(csr.rows, csr.nnz)
@@ -72,49 +220,59 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
         base = jax.jit(naive)
         t_naive = timeit(base, csr.val, csr.col_ind, csr.row_ptr, vec,
                          reps=reps)
+        accs = {}
+        for backend in BACKENDS:
+            try:
+                accs[backend] = lilac.compile(naive, mode="host",
+                                              policy=backend)
+            except Exception:
+                pass
+        # steady and cold fail independently: a cold-path exception
+        # (repack on the critical path) must not retract the backend's
+        # already-measured steady result, or the report's winner and the
+        # autotune-cache seed would disagree about the candidate set.
+        steady_t = sweep(
+            {b: (lambda acc=acc: acc(csr.val, csr.col_ind, csr.row_ptr, vec))
+             for b, acc in accs.items()}, reps=reps)
+
+        def cold(acc):
+            def fn():
+                acc.cache.clear()
+                return acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+            return fn
+
+        cold_t = sweep({b: cold(acc) for b, acc in accs.items()},
+                       reps=max(2, reps // 3), warmup=1)
         row = {}
         abs_t = {"steady": {}, "cold": {}}
         marshal_t = {}
         tune_match = None
         for backend in BACKENDS:
-            # steady and cold fail independently: a cold-path exception
-            # (repack on the critical path) must not retract the backend's
-            # already-measured steady result, or the report's winner and the
-            # autotune-cache seed would disagree about the candidate set.
-            try:
-                acc = lilac.compile(naive, mode="host", policy=backend)
-                t = timeit(acc, csr.val, csr.col_ind, csr.row_ptr, vec,
-                           reps=reps)
-                row[(backend, "steady")] = t_naive / t
-                abs_t["steady"][backend] = t
-                if acc.last_selections and tune_match is None:
-                    # the detected Match: its binding atoms carry avals, so
-                    # it keys the same autotune signature that a later
-                    # policy="autotune" call will compute from live values.
-                    tune_match = acc.last_selections[0][0]
-                # measured conversion-path seconds for this backend's
-                # marshal clauses (0.0 for repack-free backends)
-                try:
-                    h = REGISTRY.get(tune_match.computation
-                                     if tune_match else "spmv_csr", backend)
-                    marshal_t[backend] = acc.cache.estimate_marshal_seconds(
-                        h.marshal)
-                except Exception:
-                    marshal_t[backend] = 0.0
-            except Exception:
-                row[(backend, "steady")] = float("nan")
-                row[(backend, "cold")] = float("nan")
+            ts = steady_t.get(backend, float("nan"))
+            tc = cold_t.get(backend, float("nan"))
+            row[(backend, "steady")] = t_naive / ts
+            row[(backend, "cold")] = t_naive / tc
+            if ts == ts:
+                abs_t["steady"][backend] = ts
+            if tc == tc:
+                abs_t["cold"][backend] = tc
+            acc = accs.get(backend)
+            if acc is None or ts != ts:
                 continue
+            if acc.last_selections and tune_match is None:
+                # the detected Match: its binding atoms carry avals, so
+                # it keys the same autotune signature that a later
+                # policy="autotune" call will compute from live values.
+                tune_match = acc.last_selections[0][0]
+            # measured conversion-path seconds for this backend's
+            # marshal clauses (0.0 for repack-free backends)
             try:
-                def cold_call():
-                    acc.cache.clear()
-                    return acc(csr.val, csr.col_ind, csr.row_ptr, vec)
-
-                t_cold = timeit(cold_call, reps=max(2, reps // 3))
-                row[(backend, "cold")] = t_naive / t_cold
-                abs_t["cold"][backend] = t_cold
+                h = REGISTRY.get(tune_match.computation
+                                 if tune_match else "spmv_csr", backend)
+                marshal_t[backend] = acc.cache.estimate_marshal_seconds(
+                    h.marshal)
             except Exception:
-                row[(backend, "cold")] = float("nan")
+                marshal_t[backend] = 0.0
         table[prob_name] = row
         prob_report = {"t_naive_s": t_naive, "contexts": {}}
         for ctx in ("steady", "cold"):
@@ -144,9 +302,9 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
         # frequency) of the marshal-aware argmin is, by construction, never
         # worse than the kernel-only argmin's — surfaced per problem so the
         # acceptance gate can assert it.
+        from repro.core.autotune import Autotuner
+        reuse = lilac.MarshalPolicy().reuse
         if abs_t["steady"]:
-            from repro.core.autotune import Autotuner
-            reuse = lilac.MarshalPolicy().reuse
             amort = Autotuner.amortized(abs_t["steady"], marshal_t, reuse)
             kernel_winner = min(abs_t["steady"], key=abs_t["steady"].get)
             marshal_winner = min(amort, key=amort.get)
@@ -162,10 +320,33 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
             emit(f"tab2.{prob_name}.marshal_aware", amort[marshal_winner],
                  f"kernel_only={kernel_winner} "
                  f"with_marshal_cost={marshal_winner}")
+        # Per-schedule kernel sweeps: the variant space the autotuner
+        # searches, measured exhaustively (up to --max-variants) so the
+        # report shows what sweeping buys over each kernel's old
+        # fixed-constant schedule.
+        sweeps = {}
+        for hname in SCHEDULE_HARNESSES:
+            sw = schedule_sweep(csr, vec, hname, max(2, reps // 3),
+                                max_variants, plat)
+            if sw is not None:
+                sweeps[hname] = sw
+                emit(f"tab2.{prob_name}.schedule.{hname}",
+                     sw["t_best_schedule_s"],
+                     f"best={sw['best_schedule']} "
+                     f"{sw['swept_vs_default_schedule']:.2f}x over default"
+                     + (f"; fused_epilogue "
+                        f"{sw['fused_epilogue']['fused_vs_unfused']:.2f}x"
+                        if "fused_epilogue" in sw else ""))
+        if sweeps:
+            report["schedule_sweeps"][prob_name] = sweeps
         # Seed the persistent autotune cache from the steady-state sweep
         # (kernel + marshal measurements): this run IS the measurement, so
         # a later policy="autotune" process selects the amortized winner
         # here with zero re-timing.
+        # (no schedules= argument: the seeded record is a kernel-level
+        # decision over the jnp.* backends — on a platform where
+        # variant-declaring candidates enter the pool, the tuner treats it
+        # as a prior and re-sweeps rather than serving it stale)
         if tune_match is not None and abs_t["steady"]:
             m = tune_match
             tuned = tuner.record_external(m.computation, m.format, plat,
@@ -185,6 +366,22 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
     report["tuned_with_marshal_cost_never_slower_everywhere"] = all(
         p.get("marshal_aware", {}).get("never_slower", True)
         for p in report["problems"].values())
+    report["tuned_schedule_never_slower_than_default_schedule"] = all(
+        sw["tuned_schedule_never_slower_than_default_schedule"]
+        for sweeps in report["schedule_sweeps"].values()
+        for sw in sweeps.values())
+    swept_wins = [sw["swept_vs_default_schedule"]
+                  for sweeps in report["schedule_sweeps"].values()
+                  for sw in sweeps.values()]
+    report["best_swept_vs_default_schedule"] = (
+        float(np.max(swept_wins)) if swept_wins else float("nan"))
+    report["problems_with_swept_schedule_win_1_2x"] = int(sum(
+        w >= 1.2 for w in swept_wins))
+    fused_wins = [sw["fused_epilogue"]["fused_vs_unfused"]
+                  for sweeps in report["schedule_sweeps"].values()
+                  for sw in sweeps.values() if "fused_epilogue" in sw]
+    report["fused_epilogue_always_faster"] = (
+        all(w > 1.0 for w in fused_wins) if fused_wins else None)
     # End-to-end proof that the cache is live: a fresh autotune-policy pass
     # over the last problem must select from the cache without re-timing.
     timing_before = tuner.stats.timing_calls
@@ -192,6 +389,7 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None) -> dict:
     acc(csr.val, csr.col_ind, csr.row_ptr, vec)
     report["warm_start"] = {
         "selected": acc.last_selections[0][1] if acc.last_selections else None,
+        "schedule": acc.last_schedules[0] if acc.last_schedules else None,
         "re_timed_candidates": tuner.stats.timing_calls - timing_before,
     }
     if out:
@@ -204,11 +402,16 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke grid: small problems, few reps")
     ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--max-variants", type=int, default=None,
+                    help="cap per-harness schedule variants swept "
+                         "(default: 8 in --quick, unlimited otherwise)")
     ap.add_argument("--out", default="BENCH_tab2_backends.json",
                     help="JSON report path ('' to skip)")
     args = ap.parse_args(argv)
     reps = args.reps if args.reps is not None else (3 if args.quick else 10)
-    run(reps=reps, quick=args.quick, out=args.out or None)
+    mv = args.max_variants if args.max_variants is not None \
+        else (8 if args.quick else 0)
+    run(reps=reps, quick=args.quick, out=args.out or None, max_variants=mv)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,63 @@
+"""Version-guarded shims over jax API drift (sharding / shard_map).
+
+The repo pins jax 0.4.37 (CI) but several sharding APIs moved under it:
+``jax.sharding.AxisType``, ``jax.set_mesh``, ``jax.shard_map`` and
+``jax.make_mesh(axis_types=...)`` only exist in newer jax, while the old
+spellings (``Mesh`` as a context manager, ``jax.experimental.shard_map``
+with ``check_rep``) are deprecated or removed there.  Everything in this
+repo uses Auto axes — exactly the implicit behavior of the old API — so
+these shims select whichever spelling the installed jax understands
+instead of hard-failing on either side of the pin.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with explicitly-Auto axis types when the installed
+    jax knows about axis types; on older jax (no ``AxisType``) every mesh
+    axis is implicitly Auto, so the plain call is semantically identical."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=(axis_type.Auto,) * len(axis_names))
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def use_mesh(mesh):
+    """Context manager installing ``mesh`` as the ambient mesh:
+    ``jax.set_mesh`` where it exists; the ``Mesh`` object's own context
+    manager on older jax (what ``set_mesh`` wraps for Auto meshes)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def _ambient_mesh():
+    """The mesh installed by :func:`use_mesh` on old jax (the thread-local
+    physical mesh that ``Mesh.__enter__`` sets)."""
+    from jax._src import mesh as mesh_lib
+
+    mesh = mesh_lib.thread_resources.env.physical_mesh
+    if mesh.empty:
+        raise RuntimeError(
+            "compat.shard_map needs an ambient mesh on this jax version: "
+            "wrap the call in `with compat.use_mesh(mesh):`")
+    return mesh
+
+
+def shard_map(f, *, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` over the ambient mesh.  On older jax this lowers
+    to ``jax.experimental.shard_map.shard_map`` with the context-manager
+    mesh passed explicitly and ``check_vma`` renamed to ``check_rep``."""
+    new = getattr(jax, "shard_map", None)
+    if new is not None:
+        kw = {} if check_vma is None else {"check_vma": check_vma}
+        return new(f, in_specs=in_specs, out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as old_shard_map
+
+    kw = {} if check_vma is None else {"check_rep": check_vma}
+    return old_shard_map(f, _ambient_mesh(), in_specs=in_specs,
+                         out_specs=out_specs, **kw)

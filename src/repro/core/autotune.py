@@ -23,7 +23,7 @@ module is the persistent half of that story:
   the winner, and persists it.  Under budget — or when measurement is
   impossible — it falls back to the per-platform default.
 
-Winner selection is **repack-amortized** (schema 2): for host-mode
+Winner selection is **repack-amortized** (since schema 2): for host-mode
 candidates with declared marshal clauses, the measured steady-state kernel
 time is combined with the data plane's measured conversion-path cost at
 the declared call frequency (``MarshalPolicy.reuse`` — expected calls per
@@ -33,11 +33,29 @@ migrated on load: their kernel-only records stay valid for marshal-free
 candidate sets and are re-measured (not silently trusted) whenever a
 marshaling harness is in play — no stale winners.
 
+Winner selection is also **schedule-swept** (schema 3): candidates whose
+HARNESS blocks declare ``tune`` clauses contribute their whole
+constraint-filtered variant family to the search, not just the default
+schedule.  The cross-product is swept by *successive halving* — cheap
+single-iteration elimination rounds shrink the pool until it fits the
+existing exploration budget, and only the survivors get steady-state
+timing — so a 40-variant space costs a handful of full measurements.  The
+pinned decision is a ``(harness, schedule)`` pair; variants of one harness
+share its marshaled format, so repack cost is measured once per harness.
+Schema-2 records migrate as *priors*: their kernel-level winner ranks
+first in the sweep, but the record is never served as-is when any live
+candidate declares schedule variants — no stale winners, again.
+
 Environment knobs:
 
-  LILAC_AUTOTUNE_CACHE    cache file path (default ~/.cache/lilac/autotune.json)
-  LILAC_AUTOTUNE_BUDGET   max candidates measured per signature (default 8)
-  LILAC_AUTOTUNE_DISABLE  "1" -> never measure or persist; defaults only
+  LILAC_AUTOTUNE_CACHE         cache file path
+                               (default ~/.cache/lilac/autotune.json)
+  LILAC_AUTOTUNE_BUDGET        max candidates given steady-state timing
+                               per signature (default 8)
+  LILAC_AUTOTUNE_MAX_VARIANTS  cap on the swept variant pool per signature
+                               (default 64; defaults survive the cap)
+  LILAC_AUTOTUNE_DISABLE       "1" -> never measure or persist; defaults
+                               only
 """
 from __future__ import annotations
 
@@ -56,11 +74,13 @@ try:  # POSIX advisory locking for concurrent tuners; harmless to lose.
 except ImportError:  # pragma: no cover - non-POSIX
     fcntl = None
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 _ENV_PATH = "LILAC_AUTOTUNE_CACHE"
 _ENV_BUDGET = "LILAC_AUTOTUNE_BUDGET"
+_ENV_MAX_VARIANTS = "LILAC_AUTOTUNE_MAX_VARIANTS"
 _ENV_DISABLE = "LILAC_AUTOTUNE_DISABLE"
 _DEFAULT_BUDGET = 8
+_DEFAULT_MAX_VARIANTS = 64
 
 
 def default_cache_path() -> Path:
@@ -81,6 +101,22 @@ def exploration_budget() -> int:
         return int(os.environ.get(_ENV_BUDGET, _DEFAULT_BUDGET))
     except ValueError:
         return _DEFAULT_BUDGET
+
+
+def variant_cap() -> int:
+    """Cap on the swept (harness, schedule) pool per signature."""
+    try:
+        return int(os.environ.get(_ENV_MAX_VARIANTS, _DEFAULT_MAX_VARIANTS))
+    except ValueError:
+        return _DEFAULT_MAX_VARIANTS
+
+
+def schedule_key(schedule: Optional[Dict[str, Any]]) -> str:
+    """Canonical string form of a schedule variant ('default' for None/{})
+    — JSON-record and report key for per-variant timings."""
+    if not schedule:
+        return "default"
+    return ",".join(f"{k}={schedule[k]}" for k in sorted(schedule))
 
 
 # ---------------------------------------------------------------------------
@@ -113,11 +149,17 @@ def _shape_of(v: Any) -> Optional[Tuple[int, ...]]:
 
 
 def signature_of(comp: str, fmt: str, platform: str,
-                 binding: Dict[str, Any]) -> str:
+                 binding: Dict[str, Any],
+                 epilogue: Optional[str] = None) -> str:
     """Stable string key for one harness call site.
 
     Works on concrete arrays and on tracers (shape/dtype only — no data is
     read), so trace-mode lowering and host-mode execution agree on the key.
+
+    ``epilogue`` distinguishes fused-epilogue call sites (spmv+bias+relu)
+    from the plain computation: the candidate cost structure differs (a
+    fusing harness saves an output round-trip), so they tune separately.
+    Plain call sites keep the historical key format.
     """
     dims: List[str] = []
     rows = nnz = cols = None
@@ -143,7 +185,10 @@ def signature_of(comp: str, fmt: str, platform: str,
         sb = sparsity_bucket(nnz / float(rows * cols))
     else:
         sb = "d?"
-    return "|".join([comp, fmt, platform, ",".join(dims), sb])
+    sig = "|".join([comp, fmt, platform, ",".join(dims), sb])
+    if epilogue:
+        sig += f"|ep:{epilogue}"
+    return sig
 
 
 # ---------------------------------------------------------------------------
@@ -159,8 +204,9 @@ class TuneStats:
     stores: int = 0
     fallbacks: int = 0         # budget/measurability forced a default
     invalidations: int = 0     # on-disk entries dropped (version/fingerprint)
-    migrations: int = 0        # schema-1 entries migrated to schema 2
-    remeasures: int = 0        # kernel-only records re-tuned (marshal-aware)
+    migrations: int = 0        # schema-1/2 entries migrated to schema 3
+    remeasures: int = 0        # stale records re-tuned (marshal/schedule)
+    elimination_calls: int = 0  # cheap single-iteration sweep measurements
     save_errors: int = 0       # persistence failed (unwritable path)
 
     def as_dict(self) -> Dict[str, int]:
@@ -174,21 +220,34 @@ class TuneStats:
 class AutotuneCache:
     """Versioned JSON store of tuning decisions.
 
-    Layout (schema 2)::
+    Layout (schema 3)::
 
-        {"schema": 2, "registry": "<fingerprint>",
+        {"schema": 3, "registry": "<fingerprint>",
          "entries": {"<sig>": {"<mode>": {
              "harness": ..., "best_s": ..., "timings": {...},
              "marshal_s": {...}, "reuse": 100.0, "amortized_s": {...},
-             "cost_model": "amortized" | "kernel_only"}}}}
+             "cost_model": "amortized" | "kernel_only",
+             "schedule": {...} | null, "schedules": {...},
+             "variant_s": {...}, "schedule_swept": true}}}}
 
-    ``timings`` are steady-state kernel seconds; ``marshal_s`` the measured
-    conversion-path seconds per candidate; ``amortized_s`` their
-    combination at the declared call frequency (``reuse``), which is what
-    the winner minimizes.  Schema-1 files are migrated in place on load:
-    records become ``cost_model: "kernel_only"`` (their winner predates
-    marshal-aware selection) and are re-measured instead of served when a
-    marshaling candidate is present.
+    ``timings`` are steady-state kernel seconds per harness (its best
+    variant); ``marshal_s`` the measured conversion-path seconds per
+    candidate; ``amortized_s`` their combination at the declared call
+    frequency (``reuse``), which is what the winner minimizes.
+    ``schedule`` is the winning harness's swept tune-parameter assignment
+    (null for untuned winners), ``schedules`` each harness's best variant,
+    and ``variant_s`` per-variant steady-state seconds
+    (``{harness: {schedule_key: s}}``) for the survivors of the
+    successive-halving sweep.
+
+    Schema-1 files are migrated in place on load: records become
+    ``cost_model: "kernel_only"`` (their winner predates marshal-aware
+    selection) and are re-measured instead of served when a marshaling
+    candidate is present.  Schema-2 records gain
+    ``schedule_swept: false``: their kernel-level winner is kept as a
+    *prior* (it ranks first in the next sweep) but the record is
+    re-measured instead of served whenever a live candidate declares
+    schedule variants.
 
     Writes are atomic (tempfile in the same directory + ``os.replace``) and
     merge-on-save under an advisory lock, so concurrent tuners never
@@ -223,11 +282,32 @@ class AutotuneCache:
                 rec.setdefault("cost_model", "kernel_only")
                 rec.setdefault("marshal_s", {})
                 rec.setdefault("amortized_s", dict(rec.get("timings", {})))
+                # counted once per record, in _migrate_v2 (every legacy
+                # record passes through it)
                 new_modes[mode] = rec
-                self.stats.migrations += 1
             if new_modes:
                 out[sig] = new_modes
         return out
+
+    def _migrate_v2(self, entries: Dict[str, Dict[str, Any]]
+                    ) -> Dict[str, Dict[str, Any]]:
+        """Schema 2 -> 3: the measured (possibly marshal-amortized) winner
+        is still a valid *kernel-level* decision, but it predates schedule
+        sweeping — mark it unswept so the tuner uses it as a sweep prior
+        and never serves it against a variant-declaring candidate set."""
+        for modes in entries.values():
+            if not isinstance(modes, dict):
+                continue
+            for rec in modes.values():
+                if not isinstance(rec, dict) or "harness" not in rec:
+                    continue
+                if "schedule_swept" not in rec:
+                    rec.setdefault("schedule", None)
+                    rec.setdefault("schedules", {})
+                    rec.setdefault("variant_s", {})
+                    rec["schedule_swept"] = False
+                    self.stats.migrations += 1
+        return entries
 
     def _read_disk(self) -> Dict[str, Dict[str, Any]]:
         try:
@@ -236,7 +316,7 @@ class AutotuneCache:
         except (OSError, json.JSONDecodeError):
             return {}
         schema = doc.get("schema") if isinstance(doc, dict) else None
-        if not isinstance(doc, dict) or schema not in (1, SCHEMA_VERSION):
+        if not isinstance(doc, dict) or schema not in (1, 2, SCHEMA_VERSION):
             self.stats.invalidations += 1
             return {}
         if doc.get("registry") != self.registry_fingerprint:
@@ -247,6 +327,8 @@ class AutotuneCache:
             return {}
         if schema == 1:
             entries = self._migrate_v1(entries)
+        if schema in (1, 2):
+            entries = self._migrate_v2(entries)
         return entries
 
     def load(self) -> "AutotuneCache":
@@ -399,6 +481,9 @@ class Decision:
     harness: str
     source: str     # 'memory' | 'disk' | 'measured' | 'fallback'
     sig: str
+    # winning schedule variant (tune-param assignment); None when the
+    # winner has no declared tune space
+    schedule: Optional[Dict[str, Any]] = None
 
 
 class Autotuner:
@@ -413,12 +498,14 @@ class Autotuner:
     def __init__(self, registry_fingerprint: str = "",
                  cache: Optional[AutotuneCache] = None,
                  budget: Optional[int] = None,
-                 reps: int = 2):
+                 reps: int = 2,
+                 max_variants: Optional[int] = None):
         self.registry_fingerprint = registry_fingerprint
         self._cache = cache
         self._cache_injected = cache is not None
         self.budget = budget
         self.reps = reps
+        self.max_variants = max_variants
         self.stats = TuneStats()
         self.last_decision: Optional[Decision] = None
 
@@ -440,24 +527,44 @@ class Autotuner:
     def _budget(self) -> int:
         return self.budget if self.budget is not None else exploration_budget()
 
+    def _max_variants(self) -> int:
+        return (self.max_variants if self.max_variants is not None
+                else variant_cap())
+
     # -- measurement ---------------------------------------------------------
 
-    def _time_host(self, h, binding, ctx) -> float:
+    @staticmethod
+    def _as_runtime(h, binding, ctx):
+        """One candidate call exactly as the rewrite will run it: for a
+        match with a detected epilogue, non-fusing harnesses pay the
+        bias+activation after the call (rewrite.apply_epilogue) while
+        ``fuse epilogue`` harnesses pay it in-kernel — timing both the
+        same way would bias selection against the fused kernels."""
+        out = h(binding, ctx)
+        ep = getattr(ctx, "epilogue", None)
+        if ep is not None and not getattr(h, "fuse_epilogue", False):
+            from repro.core.rewrite import apply_epilogue
+
+            out = apply_epilogue(out, binding.get("bias"), ep)
+        return out
+
+    def _time_host(self, h, binding, ctx, reps: Optional[int] = None) -> float:
         """Steady-state eager timing: first call pays compile+marshal, the
         repetitions after it are what a solver loop would see."""
         import jax
 
-        out = h(binding, ctx)
+        out = self._as_runtime(h, binding, ctx)
         jax.block_until_ready(out)
         best = float("inf")
-        for _ in range(max(1, self.reps)):
+        for _ in range(max(1, reps if reps is not None else self.reps)):
             t0 = time.perf_counter()
-            out = h(binding, ctx)
+            out = self._as_runtime(h, binding, ctx)
             jax.block_until_ready(out)
             best = min(best, time.perf_counter() - t0)
         return best
 
-    def _time_trace(self, h, ctx, operands) -> float:
+    def _time_trace(self, h, ctx, operands,
+                    reps: Optional[int] = None) -> float:
         """Timed jax.jit candidate compile + steady-state run."""
         import jax
 
@@ -467,19 +574,39 @@ class Autotuner:
 
         def call(arrs):
             # through Harness.__call__ so BeforeFirstExecution setup runs,
-            # same as the host-mode timing path
-            return h({**static, **arrs}, ctx)
+            # same as the host-mode timing path (incl. the runtime epilogue
+            # for non-fusing candidates)
+            return self._as_runtime(h, {**static, **arrs}, ctx)
 
         f = jax.jit(call)
         out = f(arrays)
         jax.block_until_ready(out)
         best = float("inf")
-        for _ in range(max(1, self.reps)):
+        for _ in range(max(1, reps if reps is not None else self.reps)):
             t0 = time.perf_counter()
             out = f(arrays)
             jax.block_until_ready(out)
             best = min(best, time.perf_counter() - t0)
         return best
+
+    def _time_variant(self, h, binding, ctx, mode, operands,
+                      schedule: Optional[Dict[str, Any]],
+                      reps: int) -> Optional[float]:
+        """Time one (harness, schedule) variant; None on failure (a variant
+        whose parameters are invalid for this problem — tile not dividing a
+        dimension, VMEM overflow — is eliminated, not fatal)."""
+        prev = getattr(ctx, "schedule", None)
+        if hasattr(ctx, "schedule"):
+            ctx.schedule = schedule
+        try:
+            if mode == "trace":
+                return self._time_trace(h, ctx, operands, reps=reps)
+            return self._time_host(h, binding, ctx, reps=reps)
+        except Exception:
+            return None
+        finally:
+            if hasattr(ctx, "schedule"):
+                ctx.schedule = prev
 
     @staticmethod
     def _marshal_cost(h, ctx) -> float:
@@ -515,17 +642,84 @@ class Autotuner:
         return {n: t + marshal_s.get(n, 0.0) / max(reuse, 1.0)
                 for n, t in timings.items()}
 
+    def _variant_pool(self, ranked: Sequence[Any]
+                      ) -> List[Tuple[Any, Optional[Dict[str, Any]]]]:
+        """The sweep pool: every candidate contributes its schedule family
+        (or a single ``None`` entry when untuned), capped at
+        ``max_variants``.  Default schedules always survive the cap; the
+        remainder fills round-robin so no harness monopolizes the budget."""
+        families = [(h, list(getattr(h, "schedules", ()) or ()) or [None])
+                    for h in ranked]
+        cap = max(len(families), self._max_variants())
+        total = sum(len(f) for _, f in families)
+        if total <= cap:
+            return [(h, s) for h, fam in families for s in fam]
+        pool = [(h, fam[0]) for h, fam in families]
+        depth = 1
+        while len(pool) < cap:
+            added = False
+            for h, fam in families:
+                if depth < len(fam) and len(pool) < cap:
+                    pool.append((h, fam[depth]))
+                    added = True
+            if not added:
+                break
+            depth += 1
+        return pool
+
+    def _sweep(self, pool, binding, ctx, mode, operands
+               ) -> Dict[Tuple[str, str], Tuple[Any, Optional[Dict], float]]:
+        """Successive halving over the variant pool: cheap single-iteration
+        elimination rounds shrink the pool to the steady-state budget, then
+        the survivors are timed properly.  Returns
+        ``(harness_name, schedule_key) -> (harness, schedule, seconds)``
+        for the survivors."""
+        budget = max(1, self._budget())
+        survivors = list(pool)
+        while len(survivors) > budget:
+            scored = []
+            for h, sched in survivors:
+                self.stats.elimination_calls += 1
+                t = self._time_variant(h, binding, ctx, mode, operands,
+                                       sched, reps=1)
+                if t is not None:
+                    scored.append((t, h, sched))
+            if not scored:
+                return {}
+            scored.sort(key=lambda x: x[0])
+            keep = max(budget, (len(scored) + 1) // 2)
+            if keep >= len(scored):
+                survivors = [(h, s) for _, h, s in scored]
+                break
+            survivors = [(h, s) for _, h, s in scored[:keep]]
+        out: Dict[Tuple[str, str], Tuple[Any, Optional[Dict], float]] = {}
+        for h, sched in survivors:
+            self.stats.timing_calls += 1
+            t = self._time_variant(h, binding, ctx, mode, operands,
+                                   sched, reps=self.reps)
+            if t is not None:
+                out[(h.name, schedule_key(sched))] = (h, sched, t)
+        return out
+
     def measure(self, cands: Sequence[Any], binding: Dict[str, Any],
                 ctx, mode: str,
-                default_name: Optional[str] = None
-                ) -> Tuple[Optional[str], Dict[str, float], Dict[str, float]]:
-        """Time up to budget candidates; returns (winner_name, kernel
-        timings, marshal-path seconds).  The winner minimizes the
-        repack-amortized cost, not raw kernel time."""
+                default_name: Optional[str] = None,
+                prior_name: Optional[str] = None,
+                ) -> Tuple[Optional[str], Dict[str, float],
+                           Dict[str, float], Dict[str, Optional[Dict]],
+                           Dict[str, Dict[str, float]]]:
+        """Sweep the (harness, schedule) cross-product under the budget;
+        returns (winner_name, per-harness best kernel timings, marshal-path
+        seconds, per-harness best schedule, per-variant seconds).  The
+        winner minimizes the repack-amortized cost of its best variant, not
+        raw kernel time.  ``prior_name`` (a migrated kernel-level winner)
+        outranks even the platform default in sweep order, so budget
+        truncation keeps the prior in play."""
         import jax
 
         ranked = sorted(
-            cands, key=lambda h: (h.name != default_name,))  # default first
+            cands, key=lambda h: (h.name != prior_name,
+                                  h.name != default_name))
         ranked = ranked[: max(0, self._budget())]
         operands = None
         if mode == "trace":
@@ -536,23 +730,37 @@ class Autotuner:
             operands = (dict(binding) if concrete
                         else synthesize_operands(binding))
             if operands is None:
-                return None, {}, {}
-        timings: Dict[str, float] = {}
-        marshal_s: Dict[str, float] = {}
-        for h in ranked:
-            try:
+                return None, {}, {}, {}, {}
+        pool = self._variant_pool(ranked)
+        if len(pool) <= max(1, self._budget()):
+            # no sweep needed: steady-state time everything directly
+            measured = {}
+            for h, sched in pool:
                 self.stats.timing_calls += 1
-                if mode == "trace":
-                    timings[h.name] = self._time_trace(h, ctx, operands)
-                else:
-                    timings[h.name] = self._time_host(h, binding, ctx)
-                    marshal_s[h.name] = self._marshal_cost(h, ctx)
-            except Exception:
-                continue
-        if not timings:
-            return None, {}, {}
+                t = self._time_variant(h, binding, ctx, mode, operands,
+                                       sched, reps=self.reps)
+                if t is not None:
+                    measured[(h.name, schedule_key(sched))] = (h, sched, t)
+        else:
+            measured = self._sweep(pool, binding, ctx, mode, operands)
+        if not measured:
+            return None, {}, {}, {}, {}
+        timings: Dict[str, float] = {}
+        schedules: Dict[str, Optional[Dict]] = {}
+        variant_s: Dict[str, Dict[str, float]] = {}
+        marshal_s: Dict[str, float] = {}
+        for (name, skey), (h, sched, t) in measured.items():
+            variant_s.setdefault(name, {})[skey] = t
+            if name not in timings or t < timings[name]:
+                timings[name] = t
+                schedules[name] = sched
+        if mode != "trace":
+            by_name = {h.name: h for h, _ in pool}
+            for name in timings:
+                marshal_s[name] = self._marshal_cost(by_name[name], ctx)
         amort = self.amortized(timings, marshal_s, self._reuse(ctx))
-        return min(amort, key=amort.get), timings, marshal_s
+        winner = min(amort, key=amort.get)
+        return winner, timings, marshal_s, schedules, variant_s
 
     # -- selection -----------------------------------------------------------
 
@@ -567,8 +775,11 @@ class Autotuner:
         if not cands:
             return None
         by_name = {h.name: h for h in cands}
-        sig = signature_of(comp, fmt, platform, binding)
+        sig = signature_of(comp, fmt, platform, binding,
+                           epilogue=getattr(ctx, "epilogue", None))
         any_marshal = any(getattr(h, "marshal", ()) for h in cands)
+        any_schedules = any(getattr(h, "schedules", ()) for h in cands)
+        prior_name = None
 
         if not autotune_disabled():
             disk_before = self.cache.stats.disk_hits
@@ -578,10 +789,21 @@ class Autotuner:
                 # marshal-aware selection: when a marshaling candidate is
                 # in play the amortized argmin can differ, so re-measure
                 # instead of serving a potentially stale winner
-                if (rec.get("cost_model") == "kernel_only" and any_marshal
-                        and not autotune_disabled() and self._budget() > 0):
-                    self.stats.remeasures += 1
-                else:
+                stale = (rec.get("cost_model") == "kernel_only"
+                         and any_marshal)
+                # likewise a schema-2 (unswept) record against a candidate
+                # set with declared schedule variants: the per-variant
+                # argmin can differ, so the kernel-level winner demotes to
+                # a sweep *prior* rather than being served
+                stale = stale or (any_schedules
+                                  and not rec.get("schedule_swept"))
+                # a pinned schedule that no longer exists in the winner's
+                # declared variant family (tune space changed) is stale too
+                if not stale and rec.get("schedule") is not None:
+                    fam = getattr(by_name[rec["harness"]], "schedules", ())
+                    stale = rec["schedule"] not in fam
+                name = schedule = None
+                if not stale:
                     # the record stores the raw kernel + marshal
                     # measurements, so a DIFFERENT declared call frequency
                     # re-derives its winner arithmetically — zero re-timing
@@ -596,6 +818,18 @@ class Autotuner:
                             rec.get("marshal_s") or {}, reuse)
                         if amort:
                             name = min(amort, key=amort.get)
+                    schedule = (rec.get("schedule") if name == rec["harness"]
+                                else (rec.get("schedules") or {}).get(name))
+                    # the same family check as above, but for the
+                    # re-derived winner: a stored schedule from a since-
+                    # changed tune space must never be pinned
+                    if schedule is not None and schedule not in getattr(
+                            by_name[name], "schedules", ()):
+                        stale = True
+                if stale and self._budget() > 0:
+                    self.stats.remeasures += 1
+                    prior_name = rec["harness"]
+                elif not stale:
                     # the cache's own stats know whether this get had to
                     # read the file; mirror that classification here
                     src = ("disk" if self.cache.stats.disk_hits > disk_before
@@ -604,7 +838,10 @@ class Autotuner:
                         self.stats.memory_hits += 1
                     else:
                         self.stats.disk_hits += 1
-                    self.last_decision = Decision(name, src, sig)
+                    if hasattr(ctx, "schedule"):
+                        ctx.schedule = schedule
+                    self.last_decision = Decision(name, src, sig,
+                                                  schedule=schedule)
                     return by_name[name]
 
         if autotune_disabled() or self._budget() <= 0:
@@ -614,8 +851,9 @@ class Autotuner:
             return None
 
         self.stats.misses += 1
-        winner, timings, marshal_s = self.measure(
-            cands, binding, ctx, mode, default_name=default_name)
+        winner, timings, marshal_s, schedules, variant_s = self.measure(
+            cands, binding, ctx, mode, default_name=default_name,
+            prior_name=prior_name)
         if winner is None:
             self.stats.fallbacks += 1
             self.last_decision = Decision(default_name or cands[0].name,
@@ -623,6 +861,7 @@ class Autotuner:
             return None
         reuse = self._reuse(ctx)
         amort = self.amortized(timings, marshal_s, reuse)
+        win_schedule = schedules.get(winner)
         record = {"harness": winner,
                   "best_s": timings[winner],
                   "timings": timings,
@@ -630,29 +869,46 @@ class Autotuner:
                   "reuse": reuse,
                   "amortized_s": amort,
                   "cost_model": "amortized",
+                  "schedule": win_schedule,
+                  "schedules": {n: s for n, s in schedules.items()
+                                if s is not None},
+                  "variant_s": variant_s,
+                  "schedule_swept": True,
                   "platform": platform,
                   "format": fmt}
         self.cache.put(sig, mode, record, persist=True)
         self.stats.stores += 1
-        self.last_decision = Decision(winner, "measured", sig)
+        if hasattr(ctx, "schedule"):
+            ctx.schedule = win_schedule
+        self.last_decision = Decision(winner, "measured", sig,
+                                      schedule=win_schedule)
         return by_name[winner]
 
     def record_external(self, comp: str, fmt: str, platform: str, mode: str,
                         binding: Dict[str, Any],
                         timings: Dict[str, float],
                         marshal_s: Optional[Dict[str, float]] = None,
-                        reuse: float = 100.0) -> str:
+                        reuse: float = 100.0,
+                        schedules: Optional[Dict[str, Dict]] = None,
+                        variant_s: Optional[Dict[str, Dict[str, float]]] = None,
+                        epilogue: Optional[str] = None) -> str:
         """Seed the persistent cache from externally measured timings
         (e.g. a benchmark sweep acting as the tuner).  ``marshal_s`` (per
         candidate conversion-path seconds) makes the recorded winner the
         repack-amortized argmin at the declared ``reuse`` frequency; without
-        it the record is kernel-only.  Returns the winner."""
+        it the record is kernel-only.  ``schedules`` (per-harness best
+        variant) and ``variant_s`` (per-variant seconds) mark the record
+        schedule-swept; without them it is a kernel-level prior that gets
+        re-swept when a variant-declaring candidate appears.  Returns the
+        winner."""
         if not timings:
             raise ValueError("record_external needs at least one timing")
-        sig = signature_of(comp, fmt, platform, binding)
+        sig = signature_of(comp, fmt, platform, binding, epilogue=epilogue)
         marshal_s = dict(marshal_s or {})
         amort = self.amortized(timings, marshal_s, reuse)
         winner = min(amort, key=amort.get)
+        swept = schedules is not None or variant_s is not None
+        schedules = dict(schedules or {})
         self.cache.put(sig, mode, {"harness": winner,
                                    "best_s": timings[winner],
                                    "timings": dict(timings),
@@ -661,6 +917,10 @@ class Autotuner:
                                    "amortized_s": amort,
                                    "cost_model": ("amortized" if marshal_s
                                                   else "kernel_only"),
+                                   "schedule": schedules.get(winner),
+                                   "schedules": schedules,
+                                   "variant_s": dict(variant_s or {}),
+                                   "schedule_swept": swept,
                                    "platform": platform,
                                    "format": fmt}, persist=True)
         self.stats.stores += 1

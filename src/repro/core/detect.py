@@ -120,18 +120,48 @@ class Ctx:
         self.jaxpr = closed.jaxpr
         self.producer: Dict[Any, Eqn] = {}
         self.eqn_index: Dict[int, int] = {}
+        self.consumers: Dict[Any, List[Eqn]] = {}
         for i, eqn in enumerate(self.jaxpr.eqns):
             self.eqn_index[id(eqn)] = i
             for ov in eqn.outvars:
                 self.producer[ov] = eqn
+            seen_here = set()
+            for iv in eqn.invars:
+                if isinstance(iv, jex_core.Literal) or id(iv) in seen_here:
+                    continue
+                seen_here.add(id(iv))
+                self.consumers.setdefault(iv, []).append(eqn)
         self.invars = set(self.jaxpr.invars)
+        self.outvars = {v for v in self.jaxpr.outvars
+                        if not isinstance(v, jex_core.Literal)}
         self.constvar_vals = dict(zip(self.jaxpr.constvars, closed.consts))
         self.log: List[str] = []
+        # Per-atom memoization: detection runs every matcher over every
+        # anchor, so the same peel chains and provenance closures are
+        # requested many times per jaxpr.  Keyed on id() — the atoms are
+        # owned by self.jaxpr, which we hold, so ids are stable.
+        self._peel_cache: Dict[int, Atom] = {}
+        self._prov_cache: Dict[int, Tuple[List[Any], List[Eqn]]] = {}
+        self._subjaxpr_cache: Dict[int, Any] = {}
+        # semantic-validation verdicts, keyed by the validator on the
+        # participating atom ids: identical subgraphs reached through
+        # different patterns validate once (and reuse one sampled input
+        # set) instead of re-executing per candidate
+        self.validation_cache: Dict[Tuple, bool] = {}
 
     def prod(self, atom) -> Optional[Eqn]:
         if isinstance(atom, jex_core.Literal):
             return None
         return self.producer.get(atom)
+
+    def sole_consumer(self, var) -> Optional[Eqn]:
+        """The unique consuming equation of ``var``, or None when the value
+        is multiply-consumed or escapes as a function output (fusing it
+        away would then change observable results)."""
+        if var in self.outvars:
+            return None
+        cons = self.consumers.get(var, [])
+        return cons[0] if len(cons) == 1 else None
 
     # -- peeling ------------------------------------------------------------
 
@@ -139,8 +169,23 @@ class Ctx:
         """See through semantics-preserving wrappers:
         convert_element_type, copy, reshape-like broadcast_in_dim (adding a
         trailing unit dim), squeeze, and the negative-index normalization
-        triple select_n(lt(x,0), x, x+N) -> x."""
+        triple select_n(lt(x,0), x, x+N) -> x.  Memoized per atom."""
+        cached = self._peel_cache.get(id(atom))
+        if cached is not None:
+            return cached
+        visited = [atom]
+        out = self._peel(atom, visited)
+        for a in visited:
+            self._peel_cache[id(a)] = out
+        return out
+
+    def _peel(self, atom, visited: List[Atom]) -> Atom:
         while True:
+            cached = self._peel_cache.get(id(atom))
+            if cached is not None:
+                return cached
+            if visited and visited[-1] is not atom:
+                visited.append(atom)
             eqn = self.prod(atom)
             if eqn is None:
                 return atom
@@ -199,7 +244,11 @@ class Ctx:
 
     def provenance(self, atom) -> Tuple[List[Any], List[Eqn]]:
         """Transitive producer closure: (leaf vars [invars/constvars], eqns
-        in original topological order)."""
+        in original topological order).  Memoized per atom — callers must
+        not mutate the returned lists."""
+        cached = self._prov_cache.get(id(atom))
+        if cached is not None:
+            return cached
         eqns: Dict[int, Eqn] = {}
         leaves: List[Any] = []
         seen = set()
@@ -218,27 +267,34 @@ class Ctx:
             for iv in eqn.invars:
                 stack.append(iv)
         ordered = [eqns[i] for i in sorted(eqns)]
+        self._prov_cache[id(atom)] = (leaves, ordered)
         return leaves, ordered
 
     def eval_subgraph(self, out_atom, leaf_values: Dict[Any, np.ndarray]):
         """Concretely evaluate the provenance subgraph of ``out_atom`` given
-        values for its leaves — the semantic validation step."""
-        leaves, eqns = self.provenance(out_atom)
+        values for its leaves — the semantic validation step.  The built
+        sub-jaxpr is cached per atom, so repeated validations (multiple
+        trials, multiple candidate patterns over the same subgraph) only
+        pay jaxpr construction once."""
+        sub = self._subjaxpr_cache.get(id(out_atom))
+        if sub is None:
+            leaves, eqns = self.provenance(out_atom)
+            # The parent's debug_info describes the parent's arity; newer
+            # jax asserts arg_names/result_paths lengths match, so the
+            # sub-jaxpr must drop it entirely.
+            sub = jex_core.Jaxpr(
+                constvars=(), invars=list(leaves), outvars=[out_atom],
+                eqns=eqns, debug_info=None,
+            )
+            self._subjaxpr_cache[id(out_atom)] = sub
         vals = []
-        for lf in leaves:
+        for lf in sub.invars:
             if lf in leaf_values:
                 vals.append(leaf_values[lf])
             elif lf in self.constvar_vals:
                 vals.append(self.constvar_vals[lf])
             else:
                 raise KeyError(f"no value for leaf {lf}")
-        # The parent's debug_info describes the parent's arity; newer jax
-        # asserts arg_names/result_paths lengths match, so the sub-jaxpr
-        # must drop it entirely.
-        sub = jex_core.Jaxpr(
-            constvars=(), invars=list(leaves), outvars=[out_atom], eqns=eqns,
-            debug_info=None,
-        )
         (out,) = jcore.eval_jaxpr(sub, [], *vals)
         return np.asarray(out)
 
@@ -411,12 +467,21 @@ class Match:
     binding: Dict[str, Any]   # What-name -> jaxpr atom or python int
     notes: str = ""
     claimed_eqns: Tuple[Any, ...] = ()  # extra eqns covered by this match
+    # Detected fused epilogue covering the consumer chain of the core
+    # computation: 'relu' | 'silu' (activation, possibly after a bias add
+    # bound as binding['bias']) | 'none' (bias only) | None (no epilogue).
+    # The anchor is then the *final* epilogue equation: harnesses declaring
+    # ``fuse epilogue`` apply it in-kernel, others get it applied by the
+    # rewriter — either way the intermediate arrays never materialize in
+    # host mode.
+    epilogue: Optional[str] = None
 
     def __repr__(self):
         names = {k: (v if isinstance(v, int) else str(v))
                  for k, v in self.binding.items()}
-        return (f"Match({self.computation}/{self.format} [{self.variant}] "
-                f"@ {self.anchor} {names})")
+        ep = f" +{self.epilogue}" if self.epilogue else ""
+        return (f"Match({self.computation}/{self.format} [{self.variant}]"
+                f"{ep} @ {self.anchor} {names})")
 
 
 @dataclasses.dataclass
@@ -444,8 +509,18 @@ class DetectionReport:
 def _validate_row_expansion(ctx: Ctx, row_atom, row_ptr_var, nnz: int,
                             rows: int, trials: int = 2) -> bool:
     """Check the subgraph row_ptr -> row_ids really is CSR row expansion:
-    out == repeat(arange(rows), diff(row_ptr)) for random valid row_ptrs."""
+    out == repeat(arange(rows), diff(row_ptr)) for random valid row_ptrs.
+
+    Verdicts are memoized on the (row_atom, row_ptr_var) identity: every
+    pattern that reaches the same expansion subgraph (CSR SpMV, SpMM, the
+    COO fallback probing) shares one concrete evaluation instead of
+    re-sampling and re-executing it per candidate."""
+    key = ("row_expansion", id(row_atom), id(row_ptr_var), nnz, rows)
+    cached = ctx.validation_cache.get(key)
+    if cached is not None:
+        return cached
     rng = np.random.default_rng(0)
+    ok = True
     for _ in range(trials):
         cuts = np.sort(rng.integers(0, nnz + 1, size=max(rows - 1, 0)))
         rp = np.concatenate([[0], cuts, [nnz]]).astype(np.int32)
@@ -453,16 +528,24 @@ def _validate_row_expansion(ctx: Ctx, row_atom, row_ptr_var, nnz: int,
         try:
             got = ctx.eval_subgraph(row_atom, {row_ptr_var: rp})
         except Exception:
-            return False
+            ok = False
+            break
         if got.shape != (nnz,) or not np.array_equal(got.astype(np.int64),
                                                      expect.astype(np.int64)):
-            return False
-    return True
+            ok = False
+            break
+    ctx.validation_cache[key] = ok
+    return ok
 
 
 def _validate_onehot_dispatch(ctx: Ctx, combine_atom, idx_var, gate_var,
                               n_experts: int) -> bool:
-    """combine[t,e] must equal sum_k gate[t,k] * (idx[t,k] == e)."""
+    """combine[t,e] must equal sum_k gate[t,k] * (idx[t,k] == e).
+    Verdict memoized per (combine, idx, gate) subgraph."""
+    key = ("onehot", id(combine_atom), id(idx_var), id(gate_var), n_experts)
+    cached = ctx.validation_cache.get(key)
+    if cached is not None:
+        return cached
     t, k = idx_var.aval.shape
     rng = np.random.default_rng(0)
     idx = rng.integers(0, n_experts, size=(t, k)).astype(np.int32)
@@ -474,8 +557,11 @@ def _validate_onehot_dispatch(ctx: Ctx, combine_atom, idx_var, gate_var,
     try:
         got = ctx.eval_subgraph(combine_atom, {idx_var: idx, gate_var: gate})
     except Exception:
+        ctx.validation_cache[key] = False
         return False
-    return got.shape == expect.shape and np.allclose(got, expect, atol=1e-5)
+    ok = got.shape == expect.shape and np.allclose(got, expect, atol=1e-5)
+    ctx.validation_cache[key] = ok
+    return ok
 
 
 # ---------------------------------------------------------------------------
@@ -998,12 +1084,120 @@ def generate_matcher(comp: W.Computation) -> List[Matcher]:
     raise NotImplementedError(f"cannot generate matcher for {comp.name}")
 
 
+# ---------------------------------------------------------------------------
+# Fused-epilogue extension: grow spmv/spmm matches down their consumer chain
+# through (+bias) -> (relu | silu), so the harness replaces the whole fused
+# subgraph and the intermediate output-size arrays never round-trip memory.
+# ---------------------------------------------------------------------------
+
+_EPILOGUE_COMPS = ("spmv_csr", "spmv_coo", "spmm_csr", "spmv_ell", "spmv_jds")
+
+
+def _broadcastable_to(shape, out_shape) -> bool:
+    try:
+        return np.broadcast_shapes(tuple(shape), tuple(out_shape)) \
+            == tuple(out_shape)
+    except ValueError:
+        return False
+
+
+def _is_relu(ctx: Ctx, eqn: Eqn, cur) -> bool:
+    """max(cur, 0) in either operand order (jax.nn.relu normalizes here)."""
+    if eqn.primitive.name != "max" or len(eqn.invars) != 2:
+        return False
+    x, y = eqn.invars
+    if ctx.peel(x) is cur:
+        return ctx.is_zeros(y)
+    if ctx.peel(y) is cur:
+        return ctx.is_zeros(x)
+    return False
+
+
+def extend_epilogue(ctx: Ctx, m: Match) -> Match:
+    """Walk the sole-consumer chain of a vectorized spmv/spmm match through
+    an optional bias add and an optional relu/silu activation; on success,
+    return a widened match anchored at the chain's last equation with the
+    original anchor (and intermediates) claimed.  Escaping values (multiple
+    consumers, function outputs) stop the walk — fusing them away would
+    change observable results."""
+    if m.computation not in _EPILOGUE_COMPS or m.variant != "vectorized":
+        return m
+    cur_eqn = m.anchor_eqn
+    cur = cur_eqn.outvars[0]
+    out_shape = tuple(getattr(cur.aval, "shape", ()))
+    claimed: List[Eqn] = []
+    bias = None
+    epilogue: Optional[str] = None
+    while epilogue is None:
+        if cur in ctx.outvars:
+            break
+        cons = [e for e in ctx.consumers.get(cur, ())]
+        if len(cons) == 1:
+            e = cons[0]
+            p = e.primitive.name
+            if p in ("convert_element_type", "copy"):
+                claimed.append(e)
+                cur_eqn, cur = e, e.outvars[0]
+                continue
+            if p == "add" and bias is None:
+                x, y = e.invars
+                other = y if ctx.peel(x) is cur else (
+                    x if ctx.peel(y) is cur else None)
+                if other is None:
+                    break
+                b = ctx.peel(other)
+                bshape = tuple(getattr(b.aval, "shape", ()))
+                if not _broadcastable_to(bshape, out_shape):
+                    break
+                bias = b
+                claimed.append(e)
+                cur_eqn, cur = e, e.outvars[0]
+                continue
+            if _is_relu(ctx, e, cur):
+                epilogue = "relu"
+                claimed.append(e)
+                cur_eqn, cur = e, e.outvars[0]
+                continue
+            break
+        if len(cons) == 2:
+            # silu: cur feeds both logistic(cur) and mul(cur, logistic(cur))
+            log_e = next((e for e in cons
+                          if e.primitive.name == "logistic"), None)
+            mul_e = next((e for e in cons if e.primitive.name == "mul"), None)
+            if log_e is None or mul_e is None:
+                break
+            log_out = log_e.outvars[0]
+            if ctx.sole_consumer(log_out) is not mul_e:
+                break
+            operands = {id(ctx.peel(v)) for v in mul_e.invars}
+            if operands != {id(cur), id(ctx.peel(log_out))}:
+                break
+            epilogue = "silu"
+            claimed.extend([log_e, mul_e])
+            cur_eqn, cur = mul_e, mul_e.outvars[0]
+            continue
+        break
+    if bias is None and epilogue is None:
+        return m
+    binding = dict(m.binding)
+    if bias is not None:
+        binding["bias"] = bias
+    return dataclasses.replace(
+        m, anchor=cur, anchor_eqn=cur_eqn, binding=binding,
+        epilogue=epilogue or "none",
+        claimed_eqns=m.claimed_eqns + (m.anchor_eqn,)
+        + tuple(e for e in claimed if e is not cur_eqn),
+        notes=(m.notes + " " if m.notes else "") + "fused epilogue")
+
+
 _DEFAULT_PRIORITY = ["moe_ffn", "spmm_csr", "spmv_csr", "spmv_jds",
                      "spmv_ell", "spmv_coo", "gemv", "dotproduct"]
 
 
 class Detector:
-    def __init__(self, computations: Optional[Sequence[W.Computation]] = None):
+    def __init__(self, computations: Optional[Sequence[W.Computation]] = None,
+                 fuse_epilogues: bool = True):
+        self.fuse_epilogues = fuse_epilogues
         if computations is not None:
             comps = list(computations)
             lenient = False
@@ -1044,6 +1238,8 @@ class Detector:
                     claimed.add(id(eqn))
                     for ce in found.claimed_eqns:
                         claimed.add(id(ce))
+        if self.fuse_epilogues:
+            matches = [extend_epilogue(ctx, m) for m in matches]
         matches.sort(key=lambda mm: ctx.eqn_index.get(id(mm.anchor_eqn), 0))
         return DetectionReport(matches=matches, n_eqns=len(cj.jaxpr.eqns),
                                log=ctx.log)

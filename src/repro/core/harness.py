@@ -56,6 +56,17 @@ class CallCtx:
                                        # shared across a call's harnesses)
     format: str                    # match format: CSR/COO/ELL/JDS/DOT/...
     platform: str = "cpu"
+    # Selected schedule variant: tune-param name -> value.  None (or {})
+    # means the harness's declared default schedule.  Set by the autotuner
+    # when it sweeps/pins a variant and by explicit callers; the generated
+    # spec wrapper merges it over the defaults and passes the result to the
+    # kernel body as keyword arguments.
+    schedule: Optional[Dict[str, Any]] = None
+    # Detected fused epilogue for this call site: 'relu' | 'silu' | 'none'
+    # (bias only) | None (no epilogue).  Harnesses declaring
+    # ``fuse epilogue`` apply it in-kernel (reading ``binding['bias']``
+    # when present); for all others the rewriter applies it after the call.
+    epilogue: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -72,6 +83,17 @@ class Harness:
     # the registry fingerprint (formats/platforms/jit_safe identify the
     # harness, marshaling is an implementation detail of its data plane)
     marshal: Tuple[Any, ...] = ()
+    # declared schedule space (what_lang.TuneClause / Constraint): the
+    # autotuner sweeps the variant cross-product and pins (harness,
+    # schedule) pairs.  Also NOT in the fingerprint: growing or shrinking
+    # a tune space must not invalidate every persisted decision — stale
+    # schedules are detected per-record instead (autotune.py).
+    tune: Tuple[Any, ...] = ()
+    constraints: Tuple[Any, ...] = ()
+    # True when the body applies detected epilogues (ctx.epilogue +
+    # binding['bias']) itself — in-register for Pallas kernels; False
+    # harnesses get the epilogue applied by the rewriter after the call.
+    fuse_epilogue: bool = False
     setup: Optional[Callable] = None              # BeforeFirstExecution
     teardown: Optional[Callable] = None           # AfterLastExecution
     # Shared mutable {"up": bool} when one HARNESS block implements several
@@ -80,6 +102,21 @@ class Harness:
     # of them tears down for all, and a later call sets up again.
     lifecycle: Optional[Dict[str, bool]] = None
     _setup_done: bool = False
+    _schedules: Optional[Tuple[Dict[str, Any], ...]] = None
+
+    @property
+    def schedules(self) -> Tuple[Dict[str, Any], ...]:
+        """The lazy schedule-variant family: every constraint-satisfying
+        assignment of the declared tune params, default first.  Empty for
+        untuned harnesses."""
+        if self._schedules is None:
+            from repro.core.what_lang import enumerate_schedules
+            self._schedules = enumerate_schedules(self.tune, self.constraints)
+        return self._schedules
+
+    @property
+    def default_schedule(self) -> Dict[str, Any]:
+        return {t.name: t.values[0] for t in self.tune}
 
     def _is_up(self) -> bool:
         if self.lifecycle is not None:

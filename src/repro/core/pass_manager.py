@@ -43,10 +43,12 @@ class CompiledEntry:
     closed_jaxpr: Any
     report: D.DetectionReport
     out_tree: Any
-    # autotune pins: match index -> harness name, filled at first lowering
-    # for this signature so later calls (and re-traces under jit) reuse the
-    # measured winner without consulting the tuner again.
-    pins: Dict[int, str] = dataclasses.field(default_factory=dict)
+    # autotune pins: match index -> (harness name, schedule variant),
+    # filled at first lowering for this signature so later calls (and
+    # re-traces under jit) reuse the measured winner — including its swept
+    # kernel schedule — without consulting the tuner again.
+    pins: Dict[int, Tuple[str, Optional[Dict[str, Any]]]] = \
+        dataclasses.field(default_factory=dict)
 
 
 def _signature(flat_args) -> Tuple:
@@ -92,6 +94,10 @@ class LilacFunction:
         # (match, harness-name) pairs from the most recent call, in anchor
         # order — what actually ran, for benchmarks and tests.
         self.last_selections: List[Tuple[D.Match, str]] = []
+        # the schedule variant each selection ran with (None = default /
+        # untuned), aligned with last_selections — benchmarks record which
+        # swept schedule a plan actually used.
+        self.last_schedules: List[Optional[Dict[str, Any]]] = []
 
     # -- compilation ---------------------------------------------------------
 
@@ -122,32 +128,37 @@ class LilacFunction:
 
     def _pinned_select(self, entry: CompiledEntry):
         """Autotune policy: delegate to the persistent tuner once per match
-        per input-signature, then pin the winner into the rewrite.  Pinning
-        only happens for definitive decisions (measured or cache-hit) so a
-        can't-measure fallback — e.g. the very first call happening under a
-        user's jit trace — stays re-tunable on later concrete calls."""
+        per input-signature, then pin the (winner, schedule) pair into the
+        rewrite.  Pinning only happens for definitive decisions (measured
+        or cache-hit) so a can't-measure fallback — e.g. the very first
+        call happening under a user's jit trace — stays re-tunable on later
+        concrete calls."""
         idx_of = {id(m.anchor_eqn): i for i, m in enumerate(entry.report.matches)}
 
         def select(m: D.Match, binding=None, ctx=None) -> H.Harness:
             i = idx_of[id(m.anchor_eqn)]
-            name = entry.pins.get(i)
-            if name is not None:
+            pin = entry.pins.get(i)
+            if pin is not None:
+                name, schedule = pin
                 try:
-                    return self.registry.get(m.computation, name)
+                    h = self.registry.get(m.computation, name)
+                    if ctx is not None:
+                        ctx.schedule = schedule
+                    return h
                 except KeyError:
                     del entry.pins[i]   # harness set changed; re-tune
             h = self._select(m, binding, ctx)
             tuner = self.registry.autotuner
             dec = tuner.last_decision
             if dec is not None and dec.source in ("memory", "disk", "measured"):
-                entry.pins[i] = h.name
+                entry.pins[i] = (h.name, dec.schedule)
             return h
 
         return select
 
     def _ctx_factory(self, m: D.Match) -> H.CallCtx:
         return H.CallCtx(mode=self.mode, cache=self.cache, format=m.format,
-                         platform=self.platform)
+                         platform=self.platform, epilogue=m.epilogue)
 
     def __call__(self, *args, **kwargs):
         entry, flat = self._compile(args, kwargs)
@@ -155,10 +166,14 @@ class LilacFunction:
         select = (self._pinned_select(entry) if self.policy == "autotune"
                   else self._select)
         selections: List[Tuple[D.Match, str]] = []
-        outs = run_rewritten(entry.closed_jaxpr, matches, select,
-                             flat, self._ctx_factory,
-                             on_select=lambda m, h: selections.append((m, h.name)))
+        schedules: List[Optional[Dict[str, Any]]] = []
+        outs = run_rewritten(
+            entry.closed_jaxpr, matches, select, flat, self._ctx_factory,
+            on_select=lambda m, h, ctx: (
+                selections.append((m, h.name)),
+                schedules.append(getattr(ctx, "schedule", None))))
         self.last_selections = selections
+        self.last_schedules = schedules
         return jax.tree_util.tree_unflatten(entry.out_tree, outs)
 
 

@@ -53,9 +53,10 @@ def run_rewritten(closed_jaxpr,
     """Evaluate ``closed_jaxpr`` with matched anchors replaced by harness
     calls.  Traceable: under jit this builds the rewritten HLO.
 
-    ``on_select`` (if given) observes every (match, chosen harness) pair —
-    the pass manager uses it to pin autotuned winners into the rewrite and
-    benchmarks use it to report which backend actually ran."""
+    ``on_select`` (if given) observes every (match, chosen harness, call
+    ctx) triple — the pass manager uses it to pin autotuned winners (and
+    their schedule variants, carried on ``ctx.schedule``) into the rewrite
+    and benchmarks use it to report which backend actually ran."""
     jaxpr = closed_jaxpr.jaxpr
     env: Dict[Any, Any] = {}
 
@@ -79,7 +80,9 @@ def run_rewritten(closed_jaxpr,
     binding_atoms = set()
     for m in matches:
         for v in m.binding.values():
-            if not isinstance(v, (int, float, bool)):
+            # Literals (e.g. a scalar epilogue bias) are constants: they
+            # need no liveness root and are unhashable anyway
+            if not isinstance(v, (int, float, bool, jex_core.Literal)):
                 binding_atoms.add(v)
     dead = _dead_eqns(jaxpr, matches)
     dead = {eid for eid in dead
@@ -117,6 +120,20 @@ def run_rewritten(closed_jaxpr,
     return [read(v) for v in jaxpr.outvars]
 
 
+def apply_epilogue(out, bias, epilogue: str):
+    """The detected fused epilogue, applied at the jnp level: the unfused
+    realization for harnesses that don't declare ``fuse epilogue`` (and the
+    reference semantics the fused kernels must reproduce).  ``epilogue`` is
+    'relu' | 'silu' | 'none' (bias only)."""
+    if bias is not None:
+        out = out + bias
+    if epilogue == "relu":
+        out = jnp.maximum(out, 0)
+    elif epilogue == "silu":
+        out = out * jax.nn.sigmoid(out)
+    return out
+
+
 def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory,
                  on_select=None):
     binding_vals = {
@@ -126,8 +143,11 @@ def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory,
     ctx = ctx_factory(m)
     harness = select(m, binding_vals, ctx)
     if on_select is not None:
-        on_select(m, harness)
+        on_select(m, harness, ctx)
     out = harness(binding_vals, ctx)
+    if m.epilogue is not None and not getattr(harness, "fuse_epilogue",
+                                              False):
+        out = apply_epilogue(out, binding_vals.get("bias"), m.epilogue)
     if m.variant == "loop":
         # scan anchor: outvars = (final counter, final accumulator)
         counter_init = None

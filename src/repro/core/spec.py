@@ -87,17 +87,27 @@ def _resolve_key(binding: H.Binding, alternatives) -> Any:
 
 
 def _marshaled_fn(decl: W.HarnessDecl, body: Callable) -> Callable:
-    """Generate the marshaling wrapper for a decl's repack clauses: each
-    marshaled input is computed by its repack function, memoized in the
-    call's cache on the fingerprints of the declared key arrays, and passed
-    to the body as a keyword argument.
+    """Generate the execution wrapper for a HARNESS descriptor: marshaled
+    inputs and tuned schedule parameters both arrive at the kernel body as
+    keyword arguments.
 
-    Clauses that declare ``from <src> to <dst>`` route through the shared
-    plan-level :class:`~repro.core.marshal.DataPlane`: the conversion graph
-    plans the cheapest path to ``dst`` (riding intermediates another
-    harness already cached), with the clause's repack function as the
-    fallback when no path exists."""
+    *Marshal clauses*: each marshaled input is computed by its repack
+    function, memoized in the call's cache on the fingerprints of the
+    declared key arrays.  Clauses that declare ``from <src> to <dst>``
+    route through the shared plan-level
+    :class:`~repro.core.marshal.DataPlane`: the conversion graph plans the
+    cheapest path to ``dst`` (riding intermediates another harness already
+    cached), with the clause's repack function as the fallback when no
+    path exists.
+
+    *Tune clauses*: the body receives every declared tune param as a
+    keyword argument — the default schedule (first declared values)
+    overlaid with the caller's ``ctx.schedule``, which is how the
+    autotuner's swept winner reaches the kernel.  Unknown schedule keys
+    raise (a pinned variant must never silently no-op)."""
     clauses = decl.marshal
+    default_schedule = decl.default_schedule()
+    tune_names = frozenset(default_schedule)
 
     def fn(binding: H.Binding, ctx: H.CallCtx):
         marshaled = {}
@@ -117,6 +127,19 @@ def _marshaled_fn(decl: W.HarnessDecl, body: Callable) -> Callable:
             else:
                 marshaled[cl.name] = cache.get(
                     cl.repack, keys, lambda p=pack: p(binding))
+        if tune_names:
+            sched = dict(default_schedule)
+            override = getattr(ctx, "schedule", None) if ctx is not None \
+                else None
+            if override:
+                unknown = set(override) - tune_names
+                if unknown:
+                    raise SpecError(
+                        f"harness {decl.name!r}: schedule has unknown "
+                        f"param(s) {sorted(unknown)} "
+                        f"(declared: {sorted(tune_names)})")
+                sched.update(override)
+            marshaled.update(sched)
         return body(binding, ctx, **marshaled)
 
     fn.__name__ = getattr(body, "__name__", decl.name)
@@ -141,7 +164,25 @@ def build_harnesses(decl: W.HarnessDecl, body: Callable, *,
         if teardown is None:
             raise SpecError(f"harness {decl.name!r}: unknown "
                             f"AfterLastExecution hook {decl.after_last!r}")
-    fn = _marshaled_fn(decl, body) if decl.marshal else body
+    # Eagerly materialize the schedule family: a tune/constraint mistake
+    # (symbolic value in an arithmetic constraint, or constraints so tight
+    # the default schedule itself is pruned) must fail at registration, not
+    # mid-sweep inside the autotuner.
+    schedules = ()
+    if decl.tune:
+        try:
+            schedules = W.enumerate_schedules(decl.tune, decl.constraints)
+        except W.ParseError as e:
+            raise SpecError(f"harness {decl.name!r}: {e}")
+        if not schedules:
+            raise SpecError(
+                f"harness {decl.name!r}: constraints prune every schedule "
+                f"variant")
+        if schedules[0] != decl.default_schedule():
+            raise SpecError(
+                f"harness {decl.name!r}: the default schedule (first "
+                f"declared values) violates a constraint")
+    fn = _marshaled_fn(decl, body) if (decl.marshal or decl.tune) else body
     # One HARNESS block describes ONE backend, however many computations it
     # implements: the Harness objects share a single persistent-state dict
     # and a single lifecycle flag, so the hooks run once per backend (first
@@ -153,7 +194,10 @@ def build_harnesses(decl: W.HarnessDecl, body: Callable, *,
         H.Harness(decl.name, comp, fn, jit_safe=decl.jit_safe,
                   platforms=decl.platforms, formats=decl.formats,
                   persistent=persistent, setup=setup, teardown=teardown,
-                  lifecycle=lifecycle, marshal=decl.marshal)
+                  lifecycle=lifecycle, marshal=decl.marshal,
+                  tune=decl.tune, constraints=decl.constraints,
+                  fuse_epilogue=decl.fuse_epilogue,
+                  _schedules=schedules or None)
         for comp in decl.implements
     ]
 

@@ -19,9 +19,14 @@
               | persistent <namelist> ;
               | BeforeFirstExecution <name> ;
               | AfterLastExecution <name> ;
+              | tune <name> in { <valuelist> } ;
+              | constraint <exp> ( <= | < ) <exp> ;
+              | fuse epilogue ;
     namelist ::= <name> { , <name> }
     keylist ::= <key> { , <key> }
     key     ::= <name> { | <name> }          -- alternatives, first present wins
+    valuelist ::= <value> { , <value> }
+    value   ::= <num> | <name>               -- numbers or symbolic values
 
 A *spec* is the paper's one-off LiLAC description: the What-clause (the
 COMPUTATION programs — Fig. 2 spmv_csr, Fig. 5 spmv_jds, Fig. 11
@@ -250,6 +255,81 @@ class MarshalClause:
         return f"marshal {self.name} = {self.repack}({ks}){tail};"
 
 
+@dataclasses.dataclass(frozen=True)
+class TuneClause:
+    """``tune <param> in {v1, v2, ...}``: a declared schedule parameter.
+
+    The first value is the *default schedule*'s value — HARNESS blocks list
+    the previously hard-coded constant first so an untuned call is
+    bit-identical to the pre-tuning kernel.  Values are ints, floats or
+    bare names (symbolic values such as ``parallel``/``arbitrary`` for
+    Pallas ``dimension_semantics``)."""
+    name: str
+    values: Tuple[Any, ...]
+
+    def __str__(self):
+        vals = ", ".join(str(v) for v in self.values)
+        return f"tune {self.name} in {{{vals}}};"
+
+
+@dataclasses.dataclass(frozen=True)
+class Constraint:
+    """``constraint <exp> (<=|<) <exp>``: prunes the schedule cross-product.
+
+    Expressions use the What-language grammar over tune-parameter names and
+    constants (e.g. ``block_m * block_k <= 16384`` bounds the VMEM working
+    set); variants violating any constraint are never materialized."""
+    lhs: Expr
+    op: str          # '<=' | '<'
+    rhs: Expr
+
+    def __str__(self):
+        return f"constraint {self.lhs} {self.op} {self.rhs};"
+
+    def holds(self, env: Dict[str, Any]) -> bool:
+        lhs = _eval_expr(self.lhs, env)
+        rhs = _eval_expr(self.rhs, env)
+        return lhs <= rhs if self.op == "<=" else lhs < rhs
+
+    def params(self) -> Tuple[str, ...]:
+        """Names referenced by either side (must all be tune params)."""
+        out: List[str] = []
+
+        def walk(e: Expr):
+            if isinstance(e, Var):
+                if e.name not in out:
+                    out.append(e.name)
+            elif isinstance(e, Load):
+                walk(e.index)
+            elif isinstance(e, (Add, Mul)):
+                walk(e.lhs)
+                walk(e.rhs)
+
+        walk(self.lhs)
+        walk(self.rhs)
+        return tuple(out)
+
+
+def _eval_expr(e: Expr, env: Dict[str, Any]):
+    """Evaluate a constraint expression over concrete parameter values.
+    Referencing a non-numeric (symbolic) tune value raises TypeError,
+    which surfaces as a registration-time SpecError for the whole harness
+    (constraints are arithmetic; symbolic params can't be bounded)."""
+    if isinstance(e, Const):
+        return e.value
+    if isinstance(e, Var):
+        v = env[e.name]
+        if not isinstance(v, (int, float)):
+            raise TypeError(f"constraint references non-numeric value "
+                            f"{e.name}={v!r}")
+        return v
+    if isinstance(e, Add):
+        return _eval_expr(e.lhs, env) + _eval_expr(e.rhs, env)
+    if isinstance(e, Mul):
+        return _eval_expr(e.lhs, env) * _eval_expr(e.rhs, env)
+    raise TypeError(f"unsupported constraint expression {e!r}")
+
+
 _DEFAULT_PLATFORMS = ("cpu", "tpu")
 
 
@@ -266,6 +346,9 @@ class HarnessDecl:
     persistent: Tuple[str, ...] = ()
     before_first: Optional[str] = None       # BeforeFirstExecution hook name
     after_last: Optional[str] = None         # AfterLastExecution hook name
+    tune: Tuple[TuneClause, ...] = ()        # declared schedule parameters
+    constraints: Tuple[Constraint, ...] = ()  # schedule-space pruning
+    fuse_epilogue: bool = False              # body applies detected epilogues
 
     def __str__(self):
         lines = [f"HARNESS {self.name} implements {', '.join(self.implements)}"]
@@ -284,7 +367,46 @@ class HarnessDecl:
             lines.append(f"  BeforeFirstExecution {self.before_first};")
         if self.after_last is not None:
             lines.append(f"  AfterLastExecution {self.after_last};")
+        lines.extend(f"  {t}" for t in self.tune)
+        lines.extend(f"  {c}" for c in self.constraints)
+        if self.fuse_epilogue:
+            lines.append("  fuse epilogue;")
         return "\n".join(lines)
+
+    def default_schedule(self) -> Dict[str, Any]:
+        """First declared value of every tune param — the pre-tuning
+        constants, so an unswept call reproduces the fixed-constant kernel."""
+        return {t.name: t.values[0] for t in self.tune}
+
+    def schedules(self) -> Tuple[Dict[str, Any], ...]:
+        """The declared schedule-variant family (see
+        :func:`enumerate_schedules`); empty for untuned harnesses."""
+        return enumerate_schedules(self.tune, self.constraints)
+
+
+def enumerate_schedules(tune: Tuple[TuneClause, ...],
+                        constraints: Tuple[Constraint, ...] = (),
+                        ) -> Tuple[Dict[str, Any], ...]:
+    """Cross-product of the declared tune values, filtered by constraints.
+
+    The first variant is the default schedule (every param at its first
+    declared value) when it satisfies the constraints; declared order is
+    otherwise preserved so budget truncation keeps near-default variants.
+    """
+    if not tune:
+        return ()
+    import itertools
+
+    names = [t.name for t in tune]
+    out: List[Dict[str, Any]] = []
+    for combo in itertools.product(*(t.values for t in tune)):
+        env = dict(zip(names, combo))
+        try:
+            if all(c.holds(env) for c in constraints):
+                out.append(env)
+        except TypeError as e:
+            raise ParseError(f"constraint not evaluable: {e}")
+    return tuple(out)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,7 +441,8 @@ _KEYWORDS = {"COMPUTATION", "HARNESS", "forall", "sum"}
 
 # HARNESS clause words are contextual (not reserved in expressions).
 _CLAUSES = {"platforms", "formats", "default_for", "host_only", "marshal",
-            "persistent", "BeforeFirstExecution", "AfterLastExecution"}
+            "persistent", "BeforeFirstExecution", "AfterLastExecution",
+            "tune", "constraint", "fuse"}
 
 
 class ParseError(ValueError):
@@ -529,6 +652,19 @@ class _Parser:
             alts.append(self.expect("name"))
         return tuple(alts)
 
+    def tune_value(self):
+        t = self.peek()
+        if t is None:
+            raise self.error("expected a tune value, got end of input")
+        if t[0] == "num":
+            self.next()
+            return float(t[1]) if "." in t[1] else int(t[1])
+        if t[0] == "name":
+            self.next()
+            return t[1]
+        raise self.error(f"expected a tune value (number or name), "
+                         f"got {t[1]!r}")
+
     def harness(self) -> HarnessDecl:
         self.expect("kw", "HARNESS")
         name = self.expect("name")
@@ -542,6 +678,9 @@ class _Parser:
         persistent: Tuple[str, ...] = ()
         before_first: Optional[str] = None
         after_last: Optional[str] = None
+        tune: List[TuneClause] = []
+        constraints: List[Constraint] = []
+        fuse_epilogue = False
         while True:
             t = self.peek()
             if t is None or t[0] == "kw":
@@ -582,12 +721,49 @@ class _Parser:
                 before_first = self.expect("name")
             elif word == "AfterLastExecution":
                 after_last = self.expect("name")
+            elif word == "tune":
+                pname = self.expect("name")
+                if any(t.name == pname for t in tune):
+                    raise self.error(f"duplicate tune parameter {pname!r}")
+                self.expect("name", "in")
+                self.expect("op", "{")
+                values = [self.tune_value()]
+                while self.peek() == ("op", ","):
+                    self.next()
+                    values.append(self.tune_value())
+                if len(values) != len(set(values)):
+                    raise self.error(
+                        f"duplicate values in tune {pname!r}")
+                self.expect("op", "}")
+                tune.append(TuneClause(pname, tuple(values)))
+            elif word == "constraint":
+                lhs = self.expr()
+                t = self.peek()
+                if t not in (("op", "<="), ("op", "<")):
+                    raise self.error(
+                        f"expected <= or < in constraint, got "
+                        f"{t[1] if t else 'end of input'!r}")
+                self.next()
+                rhs = self.expr()
+                constraints.append(Constraint(lhs, t[1], rhs))
+            elif word == "fuse":
+                self.expect("name", "epilogue")
+                fuse_epilogue = True
             self.expect("op", ";")
+        tune_names = {t.name for t in tune}
+        for c in constraints:
+            for p in c.params():
+                if p not in tune_names:
+                    raise self.error(
+                        f"constraint references unknown tune parameter "
+                        f"{p!r} (declared: {sorted(tune_names)})")
         return HarnessDecl(name=name, implements=implements,
                            platforms=platforms, formats=formats,
                            jit_safe=jit_safe, default_for=default_for,
                            marshal=tuple(marshal), persistent=persistent,
-                           before_first=before_first, after_last=after_last)
+                           before_first=before_first, after_last=after_last,
+                           tune=tuple(tune), constraints=tuple(constraints),
+                           fuse_epilogue=fuse_epilogue)
 
 
 def parse_spec(src: str) -> Spec:

@@ -1,9 +1,16 @@
-"""jit'd wrapper for the BCSR SpMM kernel: layout marshaling + dispatch."""
+"""jit'd wrapper for the BCSR SpMM kernel: layout marshaling + dispatch.
+
+Schedule parameters (``bn``, ``dimension_semantics``) flow through from
+the HARNESS tune clauses; the fused epilogue fuses in-kernel when every
+block-row owns at least one stored tile (the last-visit trigger fires per
+block-row) and falls back to a post-kernel application otherwise.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.bsr_spmm.kernel import bsr_spmm_pallas
 from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
@@ -11,23 +18,66 @@ from repro.sparse.formats import BCSR
 from repro.sparse.ops import row_ids_from_row_ptr
 
 
+def _bias_kind(bias, rows: int, n: int) -> Optional[str]:
+    if bias is None or bias.ndim != 1:
+        return None
+    if bias.shape[0] == rows:
+        return "row"
+    if bias.shape[0] == n:
+        return "col"
+    return None
+
+
 def bsr_spmm(bcsr: BCSR, dense: jax.Array, bn: int = 128,
+             dimension_semantics: Optional[str] = None,
+             epilogue: Optional[str] = None,
+             bias: Optional[jax.Array] = None,
+             bias_kind: Optional[str] = None,
              interpret: bool = False) -> jax.Array:
     """Block-sparse (BCSR) @ dense -> (rows, N) f32.
 
     Pads N to a multiple of bn; block_row ids are derived from the pointer
     array (a marshaled invariant when called through a LiLAC harness).
+    ``epilogue``/``bias`` apply the detected fused epilogue in-register on
+    the last visit to each output block-row.  ``bias_kind`` ('row'|'col')
+    disambiguates a 1D bias when rows == N; by default shape resolves it,
+    row-first.
     """
+    from repro.core.rewrite import apply_epilogue
+
     rows, _ = bcsr.shape
     n = dense.shape[1]
     pad_n = (-n) % bn
     if pad_n:
         dense = jnp.pad(dense, ((0, 0), (0, pad_n)))
     block_row = row_ids_from_row_ptr(bcsr.block_rowptr, bcsr.nblocks)
+    dims = ((dimension_semantics, "arbitrary")
+            if dimension_semantics else None)
+    kind = None if bias is None else (
+        bias_kind if bias_kind is not None else _bias_kind(bias, rows, n))
+    # in-kernel fusion triggers on the last stored tile of each block-row:
+    # an empty block-row would never fire it, so fall back post-kernel.
+    # (all_block_rows_nonempty is cached on the BCSR — one host sync per
+    # packed matrix, not per call.)
+    fused = (epilogue is not None
+             and bool(getattr(bcsr, "all_block_rows_nonempty", False))
+             and (bias is None or kind is not None))
+    kbias = None
+    if fused and kind == "row":
+        pad_r = bcsr.block_rows * bcsr.blocks.shape[1] - bias.shape[0]
+        kbias = jnp.pad(bias, (0, pad_r)) if pad_r > 0 else bias
+    elif fused and kind == "col":
+        kbias = jnp.pad(bias, (0, pad_n)) if pad_n else bias
     out = bsr_spmm_pallas(bcsr.blocks, bcsr.block_col, block_row, dense,
                           num_block_rows=bcsr.block_rows, bn=bn,
+                          dimension_semantics=dims,
+                          epilogue=epilogue if fused else None,
+                          bias=kbias, bias_kind=kind if fused else None,
                           interpret=interpret)
-    return out[:rows, :n]
+    out = out[:rows, :n]
+    if epilogue is not None and not fused:
+        out = apply_epilogue(out, bias, epilogue)
+    return out
 
 
 def bsr_spmm_oracle(bcsr: BCSR, dense: jax.Array) -> jax.Array:

@@ -1,4 +1,11 @@
-"""LiLAC HARNESS declaration for the ragged grouped-matmul MoE kernel."""
+"""LiLAC HARNESS declaration for the ragged grouped-matmul MoE kernel.
+
+Schedule space: ``tm`` (token-tile rows / group alignment quantum) and the
+``fn``/``dk`` tile preferences are tune clauses; the constraint bounds the
+per-step VMEM working set (x + w + f32 out tiles).  ``dimsem`` annotates
+the m/n grid dimensions for Mosaic ('parallel' lets it reorder tiles; the
+k dimension stays 'arbitrary' — it revisits the accumulator).
+"""
 from __future__ import annotations
 
 from repro.core.spec import harness
@@ -7,10 +14,17 @@ from repro.core.spec import harness
 @harness("""
 HARNESS pallas.gmm implements moe_ffn
   default_for tpu;
+  tune tm in {128, 64, 256};
+  tune fn in {128, 256};
+  tune dk in {128, 256};
+  tune dimsem in {arbitrary, parallel};
+  constraint (tm * fn) + (tm * dk) + (fn * dk) <= 163840;
 """)
-def moe_gmm_pallas(b, ctx):
+def moe_gmm_pallas(b, ctx, *, tm=128, fn=128, dk=128, dimsem="arbitrary"):
     from repro.kernels.moe_gmm import ops as gmm_ops
     interpret = ctx.platform != "tpu"
     return gmm_ops.moe_ffn(b["x"], b["gate"], b["idx"],
                            b["wg"], b["wu"], b["wd"],
+                           tm=tm, fn=fn, dk=dk,
+                           dimension_semantics=dimsem,
                            interpret=interpret)

@@ -13,17 +13,26 @@ exact results, no token drops (unlike capacity-factor dispatch).
 Grid: (m_tiles, n_tiles, k_tiles), k fastest -> f32 accumulation in the
 output VMEM block across k steps (revisiting pattern).
 
+Schedule parameters (``tune`` clauses in the HARNESS block): ``tm``
+(token-tile rows — also the group-alignment quantum), ``fn``/``dk``
+(output / contraction tile preferences), and ``dimension_semantics`` for
+the m/n grid dimensions (k always 'arbitrary': it revisits the output
+block).  A constraint bounds the per-step VMEM working set.
+
 VMEM per step (tm=dk=fn=128, bf16 in / f32 acc):
     x (128x128x2) + w (128x128x2) + out (128x128x4) = 128 KiB.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import compiler_params
 
 
 def _gmm_kernel(tile_expert_ref, xs_ref, w_ref, out_ref):
@@ -38,11 +47,14 @@ def _gmm_kernel(tile_expert_ref, xs_ref, w_ref, out_ref):
     out_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
 
-@functools.partial(jax.jit, static_argnames=("tm", "fn", "dk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tm", "fn", "dk",
+                                             "dimension_semantics",
+                                             "interpret"))
 def gmm_pallas(xs: jax.Array,           # (Tp, D) group-aligned rows
                w: jax.Array,            # (E, D, F)
                tile_expert: jax.Array,  # (Tp//tm,) int32
                tm: int = 128, fn: int = 128, dk: int = 128,
+               dimension_semantics: Optional[Tuple[str, ...]] = None,
                interpret: bool = False) -> jax.Array:
     Tp, D = xs.shape
     E, D2, F = w.shape
@@ -63,5 +75,6 @@ def gmm_pallas(xs: jax.Array,           # (Tp, D) group-aligned rows
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((Tp, F), jnp.float32),
         interpret=interpret,
+        **compiler_params(dimension_semantics),
     )
     return fn_call(tile_expert, xs, w)

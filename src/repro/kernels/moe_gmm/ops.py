@@ -43,14 +43,23 @@ def _route(idx: jax.Array, T: int, K: int, E: int, tm: int):
     return dest, tile_expert, Tp
 
 
-@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+@functools.partial(jax.jit, static_argnames=("tm", "fn", "dk",
+                                             "dimension_semantics",
+                                             "interpret"))
 def moe_ffn(x: jax.Array,      # (T, D)
             gate: jax.Array,   # (T, K)
             idx: jax.Array,    # (T, K) int32
             wg: jax.Array, wu: jax.Array,   # (E, D, F)
             wd: jax.Array,                  # (E, F, D)
             tm: int = 128,
+            fn: int = 128, dk: int = 128,   # tile-size *preferences*
+            dimension_semantics=None,
             interpret: bool = False) -> jax.Array:
+    """``fn``/``dk`` are schedule preferences: each of the three grouped
+    matmuls contracts/outputs over D or F, so the preference clamps to the
+    largest aligned divisor of the actual dimension (`_tile`) — a swept
+    schedule can therefore never produce an invalid tiling, only coincide
+    with a neighbor (and be deduplicated by the sweep's argmin)."""
     T, D = x.shape
     K = idx.shape[1]
     E = wg.shape[0]
@@ -58,15 +67,17 @@ def moe_ffn(x: jax.Array,      # (T, D)
     dest, tile_expert, Tp = _route(idx, T, K, E, tm)
     flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
     xs = jnp.zeros((Tp, D), x.dtype).at[dest].set(x[flat_t])
-    dk_d, fn_f = _tile(D), _tile(F)   # contraction D / output F (up proj)
-    dk_f, fn_d = _tile(F), _tile(D)   # contraction F / output D (down proj)
+    dims = ((dimension_semantics, dimension_semantics, "arbitrary")
+            if dimension_semantics else None)
+    dk_d, fn_f = _tile(D, dk), _tile(F, fn)   # contract D / output F (up)
+    dk_f, fn_d = _tile(F, dk), _tile(D, fn)   # contract F / output D (down)
     g = gmm_pallas(xs, wg, tile_expert, tm=tm, fn=fn_f, dk=dk_d,
-                   interpret=interpret)
+                   dimension_semantics=dims, interpret=interpret)
     u = gmm_pallas(xs, wu, tile_expert, tm=tm, fn=fn_f, dk=dk_d,
-                   interpret=interpret)
+                   dimension_semantics=dims, interpret=interpret)
     h = (jax.nn.silu(g) * u).astype(x.dtype)
     y = gmm_pallas(h, wd, tile_expert, tm=tm, fn=fn_d, dk=dk_f,
-                   interpret=interpret)                    # (Tp, D)
+                   dimension_semantics=dims, interpret=interpret)  # (Tp, D)
     flat_g = gate.reshape(-1).astype(jnp.float32)
     contrib = y[dest] * flat_g[:, None]
     out = jax.ops.segment_sum(contrib, flat_t, num_segments=T)
@@ -74,11 +85,11 @@ def moe_ffn(x: jax.Array,      # (T, D)
 
 
 def _tile(n: int, pref: int = 128) -> int:
-    """Largest hardware-aligned tile size dividing n (prefer 128 lanes)."""
+    """Largest hardware-aligned tile size dividing n (prefer ``pref``)."""
     if n % pref == 0:
         return pref
-    for t in (64, 32, 16, 8):
-        if n % t == 0:
+    for t in (128, 64, 32, 16, 8):
+        if t < pref and n % t == 0:
             return t
     return n
 

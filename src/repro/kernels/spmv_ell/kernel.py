@@ -10,6 +10,18 @@ across the grid (BlockSpec index_map constant-0 — Pallas keeps the block
 resident); for vectors larger than VMEM the ops layer falls back to the
 column-windowed variant below.
 
+Schedule parameters (declared as ``tune`` clauses in the HARNESS block and
+swept by the autotuner — no module constants):
+
+  rows_per_slab        rows per grid step; trades grid overhead against
+                       VMEM working set per step.
+  dimension_semantics  Mosaic grid annotation ('parallel' row slabs when
+                       the slab-independent accumulation allows it).
+
+Fused epilogue: the kernels optionally apply ``(+bias) -> relu|silu``
+in-register before the single output store, eliminating the full
+output-size HBM round-trip an unfused activation pays.
+
 Grid: (num_slabs,) over row slabs.
 VMEM per step: slab val+col (2 x R x W x 4B) + vector + out row block.
 For R=256, W=256, vec 64K f32: 0.5 MiB + 0.25 MiB — double-buffer safe.
@@ -17,50 +29,76 @@ For R=256, W=256, vec 64K f32: 0.5 MiB + 0.25 MiB — double-buffer safe.
 from __future__ import annotations
 
 import functools
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import apply_epilogue_inregister, compiler_params
 
-def _spmv_ell_kernel(val_ref, col_ref, vec_ref, out_ref):
+
+def _spmv_ell_kernel(val_ref, col_ref, vec_ref, *rest, epilogue=None,
+                     has_bias=False):
+    bias_ref = rest[0] if has_bias else None
+    out_ref = rest[-1]
     val = val_ref[...].astype(jnp.float32)       # (R, W)
     col = col_ref[...]                           # (R, W)
     vec = vec_ref[...].astype(jnp.float32)       # (V,)
     gathered = jnp.take(vec, col, axis=0)        # VMEM gather on lanes
-    out_ref[...] = jnp.sum(val * gathered, axis=1)
+    acc = jnp.sum(val * gathered, axis=1)
+    bias = bias_ref[...].astype(jnp.float32) if has_bias else None
+    out_ref[...] = apply_epilogue_inregister(acc, bias, epilogue)
 
 
-@functools.partial(jax.jit, static_argnames=("rows_per_slab", "interpret"))
+@functools.partial(jax.jit, static_argnames=("rows_per_slab",
+                                             "dimension_semantics",
+                                             "epilogue", "interpret"))
 def spmv_ell_pallas(val: jax.Array,   # (rows, width)
                     col: jax.Array,   # (rows, width) int32
                     vec: jax.Array,   # (V,)
                     rows_per_slab: int = 256,
+                    dimension_semantics: Optional[Tuple[str, ...]] = None,
+                    epilogue: Optional[str] = None,
+                    bias: Optional[jax.Array] = None,   # (rows,)
                     interpret: bool = False) -> jax.Array:
     rows, width = val.shape
     assert rows % rows_per_slab == 0, (rows, rows_per_slab)
     num_slabs = rows // rows_per_slab
     grid = (num_slabs,)
+    has_bias = bias is not None
+    in_specs = [
+        pl.BlockSpec((rows_per_slab, width), lambda i: (i, 0)),
+        pl.BlockSpec((rows_per_slab, width), lambda i: (i, 0)),
+        pl.BlockSpec((vec.shape[0],), lambda i: (0,)),  # resident
+    ]
+    args = [val, col, vec]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((rows_per_slab,), lambda i: (i,)))
+        args.append(bias)
     fn = pl.pallas_call(
-        _spmv_ell_kernel,
+        functools.partial(_spmv_ell_kernel, epilogue=epilogue,
+                          has_bias=has_bias),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((rows_per_slab, width), lambda i: (i, 0)),
-            pl.BlockSpec((rows_per_slab, width), lambda i: (i, 0)),
-            pl.BlockSpec((vec.shape[0],), lambda i: (0,)),  # resident
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((rows_per_slab,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
         interpret=interpret,
+        **compiler_params(dimension_semantics),
     )
-    return fn(val, col, vec)
+    return fn(*args)
 
 
-def _spmv_ell_windowed_kernel(val_ref, col_ref, vec_ref, out_ref, *, window):
+def _spmv_ell_windowed_kernel(val_ref, col_ref, vec_ref, *rest, window,
+                              epilogue=None, has_bias=False):
     """Column-windowed variant: the slab's column indices are window-local
     (marshaling pre-subtracts the window base), so only a (window,) slice of
-    the vector is resident per step."""
+    the vector is resident per step.  The epilogue applies on the last
+    window visit, when the row accumulator is complete."""
+    bias_ref = rest[0] if has_bias else None
+    out_ref = rest[-1]
     w = pl.program_id(1)
+    nw = pl.num_programs(1)
     val = val_ref[...].astype(jnp.float32)[:, 0, :]   # (R, W)
     col = col_ref[...][:, 0, :]
     vec = vec_ref[...].astype(jnp.float32)
@@ -72,29 +110,50 @@ def _spmv_ell_windowed_kernel(val_ref, col_ref, vec_ref, out_ref, *, window):
 
     out_ref[...] += jnp.sum(val * gathered, axis=1)
 
+    if epilogue is not None or has_bias:
+        @pl.when(w == nw - 1)
+        def _():
+            bias = bias_ref[...].astype(jnp.float32) if has_bias else None
+            out_ref[...] = apply_epilogue_inregister(out_ref[...], bias,
+                                                     epilogue)
+
 
 @functools.partial(jax.jit,
-                   static_argnames=("rows_per_slab", "window", "interpret"))
+                   static_argnames=("rows_per_slab", "window",
+                                    "dimension_semantics", "epilogue",
+                                    "interpret"))
 def spmv_ell_windowed_pallas(val: jax.Array,   # (rows, n_windows, width)
                              col: jax.Array,   # (rows, n_windows, width)
                              vec: jax.Array,   # (V,) with V % window == 0
                              rows_per_slab: int = 256,
                              window: int = 4096,
+                             dimension_semantics: Optional[Tuple[str, ...]]
+                             = None,
+                             epilogue: Optional[str] = None,
+                             bias: Optional[jax.Array] = None,
                              interpret: bool = False) -> jax.Array:
     rows, n_windows, width = val.shape
     assert rows % rows_per_slab == 0
     assert vec.shape[0] == n_windows * window
     grid = (rows // rows_per_slab, n_windows)
+    has_bias = bias is not None
+    in_specs = [
+        pl.BlockSpec((rows_per_slab, 1, width), lambda i, w: (i, w, 0)),
+        pl.BlockSpec((rows_per_slab, 1, width), lambda i, w: (i, w, 0)),
+        pl.BlockSpec((window,), lambda i, w: (w,)),
+    ]
+    args = [val, col, vec]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((rows_per_slab,), lambda i, w: (i,)))
+        args.append(bias)
     fn = pl.pallas_call(
-        functools.partial(_spmv_ell_windowed_kernel, window=window),
+        functools.partial(_spmv_ell_windowed_kernel, window=window,
+                          epilogue=epilogue, has_bias=has_bias),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((rows_per_slab, 1, width), lambda i, w: (i, w, 0)),
-            pl.BlockSpec((rows_per_slab, 1, width), lambda i, w: (i, w, 0)),
-            pl.BlockSpec((window,), lambda i, w: (w,)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((rows_per_slab,), lambda i, w: (i,)),
         out_shape=jax.ShapeDtypeStruct((rows,), jnp.float32),
         interpret=interpret,
+        **compiler_params(dimension_semantics),
     )
-    return fn(val, col, vec)
+    return fn(*args)

@@ -1,5 +1,13 @@
-"""jit'd wrapper for the ELL slab SpMV kernel: padding + variant dispatch."""
+"""jit'd wrapper for the ELL slab SpMV kernel: padding + variant dispatch.
+
+All schedule parameters (``rows_per_slab``, ``dimension_semantics``) flow
+through from the HARNESS block's tune clauses; this layer only normalizes
+shapes (row padding to the slab size, bias padding) and picks the
+VMEM-resident vs column-windowed kernel.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,9 +25,29 @@ _VMEM_VEC_LIMIT = 1 << 20  # 1M elements (4 MiB f32)
 
 
 def spmv_ell(val: jax.Array, col: jax.Array, vec: jax.Array,
-             rows_per_slab: int = 256, interpret: bool = False) -> jax.Array:
-    """ELL SpMV with row padding to the slab size."""
+             rows_per_slab: int = 256,
+             dimension_semantics: Optional[str] = None,
+             epilogue: Optional[str] = None,
+             bias: Optional[jax.Array] = None,
+             interpret: bool = False) -> jax.Array:
+    """ELL SpMV with row padding to the slab size.
+
+    ``dimension_semantics`` is the per-slab grid annotation name
+    ('parallel' | 'arbitrary'); the windowed variant forces the window
+    dimension to 'arbitrary' (it accumulates).  ``epilogue``/``bias``
+    apply the detected fused epilogue in-register.
+    """
     rows, width = val.shape
+    if epilogue is not None and bias is not None and (
+            getattr(bias, "ndim", 0) != 1 or bias.shape[0] != rows):
+        # scalar / broadcast-shaped bias: the kernels tile a (rows,) bias
+        # per slab, so anything else applies post-kernel (still correct,
+        # just unfused)
+        from repro.core.rewrite import apply_epilogue
+        out = spmv_ell(val, col, vec, rows_per_slab=rows_per_slab,
+                       dimension_semantics=dimension_semantics,
+                       interpret=interpret)
+        return apply_epilogue(out, bias, epilogue)
     pad = (-rows) % rows_per_slab
     if rows < rows_per_slab:
         rows_per_slab = max(8, 1 << int(np.floor(np.log2(rows))))
@@ -27,15 +55,25 @@ def spmv_ell(val: jax.Array, col: jax.Array, vec: jax.Array,
     if pad:
         val = jnp.pad(val, ((0, pad), (0, 0)))
         col = jnp.pad(col, ((0, pad), (0, 0)))
+        if bias is not None:
+            bias = jnp.pad(bias, (0, pad))
     if vec.shape[0] <= _VMEM_VEC_LIMIT:
+        dims = (dimension_semantics,) if dimension_semantics else None
         out = spmv_ell_pallas(val, col, vec, rows_per_slab=rows_per_slab,
+                              dimension_semantics=dims,
+                              epilogue=epilogue, bias=bias,
                               interpret=interpret)
     else:
-        out = _windowed(val, col, vec, rows_per_slab, interpret)
+        out = _windowed(val, col, vec, rows_per_slab, interpret,
+                        dimension_semantics=dimension_semantics,
+                        epilogue=epilogue, bias=bias)
     return out[:rows]
 
 
-def _windowed(val, col, vec, rows_per_slab, interpret, window: int = 1 << 16):
+def _windowed(val, col, vec, rows_per_slab, interpret, window: int = 1 << 16,
+              dimension_semantics: Optional[str] = None,
+              epilogue: Optional[str] = None,
+              bias: Optional[jax.Array] = None):
     rows, width = val.shape
     v = vec.shape[0]
     pad_v = (-v) % window
@@ -55,9 +93,14 @@ def _windowed(val, col, vec, rows_per_slab, interpret, window: int = 1 << 16):
     r = jnp.arange(rows)[:, None] + jnp.zeros_like(col)
     val3 = val3.at[r, wid, pos].set(val)
     col3 = col3.at[r, wid, pos].set(col % window)
+    dims = ((dimension_semantics, "arbitrary")
+            if dimension_semantics else None)
     return spmv_ell_windowed_pallas(val3, col3, vec,
                                     rows_per_slab=rows_per_slab,
-                                    window=window, interpret=interpret)
+                                    window=window,
+                                    dimension_semantics=dims,
+                                    epilogue=epilogue, bias=bias,
+                                    interpret=interpret)
 
 
 def spmv_ell_oracle(val, col, vec):

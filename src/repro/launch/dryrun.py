@@ -31,6 +31,7 @@ import jax          # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.configs import SHAPES, all_archs, get_arch, shape_skips  # noqa: E402
+from repro import compat                                            # noqa: E402
 from repro.launch.mesh import make_production_mesh, mesh_rules      # noqa: E402
 from repro.models import build_model                                # noqa: E402
 from repro.models import spec as S                                  # noqa: E402
@@ -72,7 +73,11 @@ _TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"')
 _OPLINE = re.compile(r"^(?:ROOT\s+)?%?([\w.-]+)\s*=\s*"
                      r"((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*))\s+"
                      r"([a-z0-9-]+)\(")
-_DOT_OPERANDS = re.compile(r"\(%?([\w.-]+),\s*%?([\w.-]+)")
+# operands may carry inline type annotations on older XLA text
+# ("dot(f32[64,32]{1,0} %Arg_0.1, ...)"), bare names on newer
+_DOT_OPERANDS = re.compile(
+    r"\((?:[a-z0-9]+\[[0-9,]*\]\S*\s+)?%?([\w.-]+),"
+    r"\s*(?:[a-z0-9]+\[[0-9,]*\]\S*\s+)?%?([\w.-]+)")
 _LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
 
 
@@ -307,7 +312,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         bshard = TS.batch_shardings(model, shape, mesh, rules)
         abs_opt = jax.eval_shape(lambda p: O.adamw_init(opt_cfg, p), abs_params)
         abs_batch = model.input_specs(shape)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             lowered = jax.jit(
                 step,
                 in_shardings=(pshard, oshard, bshard),
@@ -319,7 +324,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         bshard = TS.batch_shardings(model, shape, mesh, rules)
         cshard = TS.prefill_cache_shardings(model, shape, mesh, rules)
         abs_batch = model.input_specs(shape)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             lowered = jax.jit(
                 step, in_shardings=(pshard, bshard),
                 out_shardings=(None, cshard),
@@ -328,7 +333,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         step = TS.make_serve_step(model, "decode")
         bsh = TS.batch_shardings(model, shape, mesh, rules)
         specs = model.input_specs(shape)
-        with jax.set_mesh(mesh):
+        with compat.use_mesh(mesh):
             lowered = jax.jit(
                 step,
                 in_shardings=(pshard, bsh["cache"], bsh["tokens"], bsh["pos"]),

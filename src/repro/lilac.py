@@ -41,9 +41,12 @@ from repro.core.pass_manager import (CompileOptions, LilacDeprecationWarning,
 from repro.core.spec import (HOOKS, REPACKS, SpecError, build_harnesses,
                              harness, hook, register_builtins, register_spec,
                              repack)
+from repro.core.rewrite import apply_epilogue
 from repro.core.what_lang import (BUILTIN_SPECS, BUILTINS, Computation,
-                                  HarnessDecl, MarshalClause, ParseError,
-                                  Spec, parse, parse_harness, parse_spec)
+                                  Constraint, HarnessDecl, MarshalClause,
+                                  ParseError, Spec, TuneClause,
+                                  enumerate_schedules, parse, parse_harness,
+                                  parse_spec)
 
 __all__ = [
     # entry point
@@ -53,8 +56,10 @@ __all__ = [
     "build_harnesses", "SpecError", "REPACKS", "HOOKS",
     # language
     "parse", "parse_spec", "parse_harness", "ParseError", "Spec",
-    "Computation", "HarnessDecl", "MarshalClause", "BUILTINS",
-    "BUILTIN_SPECS",
+    "Computation", "HarnessDecl", "MarshalClause", "TuneClause",
+    "Constraint", "enumerate_schedules", "BUILTINS", "BUILTIN_SPECS",
+    # tunable schedules / epilogues
+    "apply_epilogue",
     # registry / runtime
     "REGISTRY", "Harness", "HarnessRegistry", "DuplicateHarnessError",
     "CallCtx", "MarshalingCache", "ReadObject", "TrackedArray",

@@ -37,7 +37,9 @@ class Model:
         total = self.param_count()
         if not cfg.moe_experts:
             return total
-        leaves = jax.tree.leaves_with_path(
+        # jax.tree.leaves_with_path is newer-jax only; the tree_util
+        # spelling exists on both sides of the pin
+        leaves = jax.tree_util.tree_leaves_with_path(
             self.spec, is_leaf=lambda x: isinstance(x, S.ParamSpec))
         expert_params = 0
         for path, p in leaves:

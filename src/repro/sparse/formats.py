@@ -16,6 +16,7 @@ Static metadata (shape, block size) lives in aux_data.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Tuple
 
 import jax
@@ -152,6 +153,14 @@ class BCSR:
     @property
     def block_rows(self) -> int:
         return self.shape[0] // self.block_shape[0]
+
+    @functools.cached_property
+    def all_block_rows_nonempty(self) -> bool:
+        """True when every block-row owns at least one stored tile.  Gates
+        in-kernel epilogue fusion (the last-visit trigger fires per
+        block-row); computed once per packed matrix — a host sync here
+        instead of on every kernel call."""
+        return bool(np.all(np.diff(np.asarray(self.block_rowptr)) > 0))
 
     def todense(self) -> jax.Array:
         bm, bn = self.block_shape

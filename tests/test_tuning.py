@@ -1,0 +1,573 @@
+"""Tunable kernel schedules (spec-declared parameter spaces + variant
+sweeps):
+
+  * ``tune`` / ``constraint`` / ``fuse epilogue`` grammar round-trips, and
+    malformed clauses fail with line/col positions
+  * constraint expressions prune the schedule cross-product (and an
+    over-tight constraint set fails at registration, not mid-sweep)
+  * schedule params reach kernel bodies as keyword arguments; unknown
+    schedule keys raise
+  * every schedule variant of the ELL slab kernel is bit-identical to the
+    default (fixed-seed always; property-tested under hypothesis)
+  * the successive-halving sweep picks the known-best (harness, schedule)
+    pair on a rigged timer, spending full measurements only on survivors
+  * v2 -> v3 cache migration keeps kernel-level winners as priors and
+    never serves them stale when schedule variants exist
+  * fused-epilogue detection widens spmv matches and the fused kernels
+    reproduce the unfused semantics
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import lilac
+from repro.core import what_lang as W
+from repro.core.autotune import (Autotuner, AutotuneCache, schedule_key,
+                                 signature_of)
+from repro.core.harness import CallCtx, HarnessRegistry
+from repro.core.marshal import MarshalingCache
+from repro.core.spec import SpecError, register_spec
+from repro.sparse import csr_from_dense, ell_from_csr
+from repro.sparse.random import random_dense_sparse
+
+
+# ---------------------------------------------------------------------------
+# grammar
+# ---------------------------------------------------------------------------
+
+TUNED_TEXT = """
+HARNESS toy.tuned implements spmv_csr
+  formats CSR;
+  tune block in {256, 64, 128, 512};
+  tune dimsem in {arbitrary, parallel};
+  constraint (block * 128) < 65536;
+  fuse epilogue;
+"""
+
+
+def test_tune_clause_round_trip():
+    d = W.parse_harness(TUNED_TEXT)
+    assert [t.name for t in d.tune] == ["block", "dimsem"]
+    assert d.tune[0].values == (256, 64, 128, 512)
+    assert d.tune[1].values == ("arbitrary", "parallel")
+    assert d.fuse_epilogue
+    assert len(d.constraints) == 1
+    # printed form re-parses to an equal AST (the spec-surface invariant
+    # CI checks for every builtin)
+    assert W.parse_harness(str(d)) == d
+    # default schedule = first declared values (the old hard constants)
+    assert d.default_schedule() == {"block": 256, "dimsem": "arbitrary"}
+
+
+def test_builtin_kernel_specs_round_trip():
+    """The shipped Pallas HARNESS blocks (which now carry tune clauses)
+    must round-trip through the printer like every other builtin."""
+    for comp in ("spmv_ell", "spmv_csr", "spmm_csr", "moe_ffn"):
+        for h in lilac.REGISTRY.harnesses_for(comp):
+            if not h.tune:
+                continue
+            assert h.schedules[0] == h.default_schedule
+            assert all(set(s) == set(h.default_schedule)
+                       for s in h.schedules)
+
+
+@pytest.mark.parametrize("bad,fragment", [
+    ("HARNESS h implements x\n  tune p in {};", "tune value"),
+    ("HARNESS h implements x\n  tune p in {1, 1};", "duplicate values"),
+    ("HARNESS h implements x\n  tune p in {1};\n  tune p in {2};",
+     "duplicate tune parameter"),
+    ("HARNESS h implements x\n  constraint a <= 4;", "unknown tune"),
+    ("HARNESS h implements x\n  tune p in {1};\n  constraint p = 4;",
+     "expected <= or <"),
+    ("HARNESS h implements x\n  fuse something;", "epilogue"),
+])
+def test_tune_parse_errors_have_positions(bad, fragment):
+    with pytest.raises(W.ParseError) as ei:
+        W.parse_harness(bad)
+    assert fragment in str(ei.value)
+    # 1-based source position attached (all fixtures err past line 1)
+    assert ei.value.line is not None and ei.value.line >= 2
+    assert ei.value.col is not None and ei.value.col >= 1
+
+
+def test_constraint_filters_cross_product():
+    d = W.parse_harness(TUNED_TEXT)
+    scheds = d.schedules()
+    # block * 128 <= 65536 prunes block=512 in every dimsem combination
+    assert len(scheds) == 3 * 2
+    assert all(s["block"] != 512 for s in scheds)
+    assert scheds[0] == d.default_schedule()
+
+
+def test_overtight_constraints_fail_at_registration():
+    reg = HarnessRegistry()
+    with pytest.raises(SpecError, match="prune every schedule"):
+        register_spec("""
+HARNESS toy.bad implements spmv_csr
+  tune block in {64, 128};
+  constraint block < 64;
+""", {"toy.bad": lambda b, ctx, **kw: None}, registry=reg)
+
+
+def test_default_schedule_violating_constraint_rejected():
+    reg = HarnessRegistry()
+    with pytest.raises(SpecError, match="default schedule"):
+        register_spec("""
+HARNESS toy.bad implements spmv_csr
+  tune block in {512, 64};
+  constraint block <= 128;
+""", {"toy.bad": lambda b, ctx, **kw: None}, registry=reg)
+
+
+# ---------------------------------------------------------------------------
+# schedule params -> kernel body
+# ---------------------------------------------------------------------------
+
+def _record_registry():
+    reg = HarnessRegistry()
+    seen = []
+
+    def body(b, ctx, *, block=None, dimsem=None):
+        seen.append({"block": block, "dimsem": dimsem})
+        return np.zeros(b["rows"], np.float32)
+
+    register_spec(TUNED_TEXT, {"toy.tuned": body}, registry=reg)
+    return reg, seen
+
+
+def _toy_binding(rows=64, nnz=512, cols=64):
+    return {"a": np.ones(nnz, np.float32),
+            "colidx": np.zeros(nnz, np.int32),
+            "rowstr": np.linspace(0, nnz, rows + 1).astype(np.int32),
+            "iv": np.ones(cols, np.float32),
+            "rows": rows, "nnz": nnz}
+
+
+def test_schedule_params_reach_body_as_kwargs():
+    reg, seen = _record_registry()
+    h = reg.get("spmv_csr", "toy.tuned")
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR")
+    h(_toy_binding(), ctx)
+    assert seen[-1] == {"block": 256, "dimsem": "arbitrary"}   # defaults
+    ctx.schedule = {"block": 64, "dimsem": "parallel"}
+    h(_toy_binding(), ctx)
+    assert seen[-1] == {"block": 64, "dimsem": "parallel"}
+    ctx.schedule = {"block": 64}                               # partial
+    h(_toy_binding(), ctx)
+    assert seen[-1] == {"block": 64, "dimsem": "arbitrary"}
+    ctx.schedule = {"nope": 1}
+    with pytest.raises(SpecError, match="unknown"):
+        h(_toy_binding(), ctx)
+
+
+# ---------------------------------------------------------------------------
+# variant-vs-default bit-identical outputs
+# ---------------------------------------------------------------------------
+
+def _ell_problem(rows, cols, density, seed):
+    csr = csr_from_dense(random_dense_sparse(rows, cols, density, seed))
+    ell = ell_from_csr(csr)
+    vec = jnp.asarray(np.random.default_rng(seed + 1)
+                      .standard_normal(cols).astype(np.float32))
+    return ell, vec
+
+
+def _assert_variants_bit_identical(rows, cols, density, seed):
+    from repro.kernels.spmv_ell import ops as ell_ops
+    ell, vec = _ell_problem(rows, cols, density, seed)
+    base = np.asarray(ell_ops.spmv_ell(ell.val, ell.col, vec,
+                                       interpret=True))
+    h = lilac.REGISTRY.get("spmv_ell", "pallas.ell")
+    for sched in h.schedules:
+        out = np.asarray(ell_ops.spmv_ell(
+            ell.val, ell.col, vec,
+            rows_per_slab=sched["rows_per_slab"],
+            dimension_semantics=sched["dimsem"], interpret=True))
+        # bit-identical, not allclose: schedule variants only re-tile the
+        # grid, never the within-row accumulation order
+        assert (out == base).all(), sched
+
+
+def test_variants_bit_identical_fixed_seeds():
+    _assert_variants_bit_identical(96, 80, 0.15, 3)
+
+
+def test_variants_bit_identical_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(rows=st.integers(8, 96), cols=st.integers(8, 96),
+               density=st.floats(0.05, 0.5), seed=st.integers(0, 5))
+    @hyp.settings(max_examples=8, deadline=None)
+    def prop(rows, cols, density, seed):
+        _assert_variants_bit_identical(rows, cols, density, seed)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# successive halving on a rigged timer
+# ---------------------------------------------------------------------------
+
+def _rigged_tuner(monkeypatch, costs, budget=2, fingerprint="fp"):
+    """An Autotuner whose variant timer reads from a cost table keyed on
+    (harness name, schedule_key) — deterministic sweeps, zero sleeping."""
+    calls = []
+
+    def fake_time_variant(self, h, binding, ctx, mode, operands, schedule,
+                          reps):
+        calls.append((h.name, schedule_key(schedule), reps))
+        return costs[(h.name, schedule_key(schedule))]
+
+    monkeypatch.setattr(Autotuner, "_time_variant", fake_time_variant)
+    return Autotuner(registry_fingerprint=fingerprint, budget=budget), calls
+
+
+def test_successive_halving_picks_known_best(monkeypatch):
+    reg, _ = _record_registry()
+    register_spec("""
+HARNESS toy.plain implements spmv_csr
+  formats CSR;
+""", {"toy.plain": lambda b, ctx: np.zeros(b["rows"], np.float32)},
+        registry=reg)
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    h = reg.get("spmv_csr", "toy.tuned")
+    assert len(h.schedules) == 6          # constraint-filtered space
+    best = {"block": 128, "dimsem": "parallel"}
+    costs = {("toy.plain", "default"): 5e-3}
+    for s in h.schedules:
+        costs[("toy.tuned", schedule_key(s))] = \
+            1e-4 if s == best else 3e-3
+    tuner, calls = _rigged_tuner(monkeypatch, costs, budget=2)
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR")
+    w = tuner.select("spmv_csr", "CSR", "cpu", "host", cands,
+                     _toy_binding(), ctx, default_name="toy.plain")
+    assert w.name == "toy.tuned"
+    assert tuner.last_decision.schedule == best
+    assert ctx.schedule == best           # pinned for the actual call
+    # halving economics: the 7-variant pool was thinned by cheap
+    # single-rep rounds; full-rep measurements only for <= budget
+    # survivors
+    elim = [c for c in calls if c[2] == 1]
+    full = [c for c in calls if c[2] != 1]
+    assert tuner.stats.elimination_calls == len(elim) > 0
+    assert len(full) <= 2
+    assert tuner.stats.timing_calls == len(full)
+    # the winner's record persists the schedule
+    rec = tuner.cache.get(tuner.last_decision.sig, "host")
+    assert rec["schedule"] == best and rec["schedule_swept"] is True
+
+
+def test_variant_pool_cap_keeps_defaults(monkeypatch):
+    reg, _ = _record_registry()
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    h = cands[0]
+    tuner = Autotuner(registry_fingerprint="fp", budget=8, max_variants=3)
+    pool = tuner._variant_pool(cands)
+    assert len(pool) == 3
+    assert pool[0] == (h, h.schedules[0])   # default survives the cap
+
+
+# ---------------------------------------------------------------------------
+# v2 -> v3 migration
+# ---------------------------------------------------------------------------
+
+def _v2_record(winner, timings):
+    return {"harness": winner, "best_s": timings[winner],
+            "timings": timings, "marshal_s": {n: 0.0 for n in timings},
+            "reuse": 100.0, "amortized_s": dict(timings),
+            "cost_model": "amortized"}
+
+
+def test_v2_migration_serves_when_no_variants(tmp_path, monkeypatch):
+    """Against a variant-free candidate set, a migrated v2 record is still
+    authoritative: served with zero re-timing."""
+    reg = HarnessRegistry()
+    for name in ("toy.a", "toy.b"):
+        register_spec(f"""
+HARNESS {name} implements spmv_csr
+  formats CSR;
+""", {name: lambda b, ctx: np.zeros(b["rows"], np.float32)}, registry=reg)
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    binding = _toy_binding()
+    sig = signature_of("spmv_csr", "CSR", "cpu", binding)
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps({
+        "schema": 2, "registry": "fp", "entries": {
+            sig: {"host": _v2_record("toy.b",
+                                     {"toy.a": 2e-3, "toy.b": 1e-3})}}}))
+    cache = AutotuneCache(path, registry_fingerprint="fp")
+    tuner = Autotuner(registry_fingerprint="fp", cache=cache, budget=4)
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR")
+    w = tuner.select("spmv_csr", "CSR", "cpu", "host", cands, binding, ctx,
+                     default_name="toy.a")
+    assert w.name == "toy.b"
+    assert tuner.stats.timing_calls == 0
+    assert tuner.stats.remeasures == 0
+    assert cache.stats.migrations == 1
+
+
+def test_v2_migration_never_serves_stale_winner_with_variants(
+        tmp_path, monkeypatch):
+    """When any live candidate declares schedule variants, a migrated
+    (unswept) v2 winner is a *prior*, not an answer: the tuner re-sweeps
+    and can dethrone it with a swept schedule."""
+    reg, _ = _record_registry()                     # toy.tuned (6 variants)
+    register_spec("""
+HARNESS toy.legacy implements spmv_csr
+  formats CSR;
+""", {"toy.legacy": lambda b, ctx: np.zeros(b["rows"], np.float32)},
+        registry=reg)
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    binding = _toy_binding()
+    sig = signature_of("spmv_csr", "CSR", "cpu", binding)
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps({
+        "schema": 2, "registry": "fp", "entries": {
+            sig: {"host": _v2_record(
+                "toy.legacy",
+                {"toy.legacy": 1e-3, "toy.tuned": 2e-3})}}}))
+    best = {"block": 64, "dimsem": "parallel"}
+    costs = {("toy.legacy", "default"): 1e-3}
+    h = reg.get("spmv_csr", "toy.tuned")
+    for s in h.schedules:
+        costs[("toy.tuned", schedule_key(s))] = \
+            1e-5 if s == best else 5e-3
+    cache = AutotuneCache(path, registry_fingerprint="fp")
+    tuner, calls = _rigged_tuner(monkeypatch, costs, budget=2)
+    tuner._cache = cache
+    tuner._cache_injected = True
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR")
+    w = tuner.select("spmv_csr", "CSR", "cpu", "host", cands, binding, ctx,
+                     default_name="toy.legacy")
+    # the stale kernel-level winner was NOT served: a sweep ran and found
+    # the faster swept schedule
+    assert tuner.stats.remeasures == 1
+    assert w.name == "toy.tuned"
+    assert tuner.last_decision.schedule == best
+    # the prior winner was ranked into the sweep (survived budget
+    # truncation) rather than discarded
+    assert any(name == "toy.legacy" for name, _, _ in calls)
+    # and the re-written record is schedule-swept: a second select serves
+    # from cache with no further timing
+    n = len(calls)
+    w2 = tuner.select("spmv_csr", "CSR", "cpu", "host", cands, binding,
+                      ctx, default_name="toy.legacy")
+    assert w2.name == "toy.tuned" and len(calls) == n
+
+
+def test_stale_pinned_schedule_retunes(monkeypatch):
+    """A v3 record whose pinned schedule vanished from the declared family
+    (the tune space changed) re-measures instead of running a dead pin."""
+    reg, _ = _record_registry()
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    binding = _toy_binding()
+    sig = signature_of("spmv_csr", "CSR", "cpu", binding)
+    h = cands[0]
+    costs = {("toy.tuned", schedule_key(s)): 1e-3 for s in h.schedules}
+    tuner, calls = _rigged_tuner(monkeypatch, costs, budget=8)
+    tuner.cache.put(sig, "host", {
+        "harness": "toy.tuned", "best_s": 1e-4,
+        "timings": {"toy.tuned": 1e-4}, "marshal_s": {}, "reuse": 100.0,
+        "amortized_s": {"toy.tuned": 1e-4}, "cost_model": "amortized",
+        "schedule": {"block": 1024, "dimsem": "arbitrary"},   # no longer valid
+        "schedules": {}, "variant_s": {}, "schedule_swept": True},
+        persist=False)
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR")
+    w = tuner.select("spmv_csr", "CSR", "cpu", "host", cands, binding, ctx,
+                     default_name="toy.tuned")
+    assert tuner.stats.remeasures == 1
+    assert w.name == "toy.tuned"
+    assert tuner.last_decision.schedule in h.schedules
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: autotuned schedule pinned into the rewrite
+# ---------------------------------------------------------------------------
+
+def test_autotune_pins_harness_and_schedule_into_rewrite(monkeypatch):
+    reg = HarnessRegistry()
+    fast = {"block": 128, "dimsem": "arbitrary"}
+
+    # rig the timer (wall-clock sleeps flake on loaded machines): the
+    # harness still executes for real through the rigged measurement and
+    # the pinned call, so numerics are exercised end to end
+    real = Autotuner._time_variant
+
+    def rigged(self, h, binding, ctx, mode, operands, schedule, reps):
+        t = real(self, h, binding, ctx, mode, operands, schedule, reps)
+        if t is None:
+            return None
+        return 1e-5 if schedule == fast else 1e-2
+
+    monkeypatch.setattr(Autotuner, "_time_variant", rigged)
+
+    def tuned_body(b, ctx, *, block=256, dimsem="arbitrary"):
+        row = jnp.repeat(jnp.arange(b["rows"], dtype=jnp.int32),
+                         jnp.diff(b["rowstr"]),
+                         total_repeat_length=b["nnz"])
+        return jax.ops.segment_sum(b["a"] * b["iv"][b["colidx"]], row,
+                                   num_segments=b["rows"])
+
+    register_spec("""
+HARNESS toy.tuned implements spmv_csr
+  formats CSR;
+  tune block in {256, 128};
+  tune dimsem in {arbitrary};
+""", {"toy.tuned": tuned_body}, registry=reg)
+    reg._defaults[("spmv_csr", jax.default_backend())] = "toy.tuned"
+
+    csr = csr_from_dense(random_dense_sparse(64, 64, 0.2, 0))
+    vec = jnp.asarray(np.random.default_rng(1)
+                      .standard_normal(64).astype(np.float32))
+
+    def naive(val, col, row_ptr, v):
+        row = jnp.repeat(jnp.arange(64, dtype=jnp.int32), jnp.diff(row_ptr),
+                         total_repeat_length=csr.nnz)
+        return jax.ops.segment_sum(val * v[col], row, num_segments=64)
+
+    acc = lilac.compile(naive, mode="host", policy="autotune", registry=reg)
+    out = acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    ref = naive(csr.val, csr.col_ind, csr.row_ptr, vec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3,
+                               rtol=1e-3)
+    assert acc.last_selections[0][1] == "toy.tuned"
+    assert acc.last_schedules[0] == fast
+    entry = next(iter(acc._compiled.values()))
+    assert entry.pins == {0: ("toy.tuned", fast)}
+    # repeat call rides the pin: same schedule, zero re-timing
+    timed = reg.autotuner.stats.timing_calls
+    acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    assert acc.last_schedules[0] == fast
+    assert reg.autotuner.stats.timing_calls == timed
+
+
+# ---------------------------------------------------------------------------
+# fused epilogues
+# ---------------------------------------------------------------------------
+
+def _spmv_fn(rows, nnz):
+    def fn(val, col, row_ptr, v, b):
+        row = jnp.repeat(jnp.arange(rows, dtype=jnp.int32),
+                         jnp.diff(row_ptr), total_repeat_length=nnz)
+        y = jax.ops.segment_sum(val * v[col], row, num_segments=rows)
+        return jax.nn.relu(y + b)
+    return fn
+
+
+def test_epilogue_detection_and_rewrite_equivalence():
+    csr = csr_from_dense(random_dense_sparse(96, 96, 0.1, 0))
+    rng = np.random.default_rng(1)
+    vec = jnp.asarray(rng.standard_normal(96).astype(np.float32))
+    bias = jnp.asarray(rng.standard_normal(96).astype(np.float32))
+    fn = _spmv_fn(csr.rows, csr.nnz)
+    acc = lilac.compile(fn, mode="host")
+    rep = acc.report_for(csr.val, csr.col_ind, csr.row_ptr, vec, bias)
+    assert len(rep.matches) == 1
+    m = rep.matches[0]
+    assert m.epilogue == "relu" and "bias" in m.binding
+    out = acc(csr.val, csr.col_ind, csr.row_ptr, vec, bias)
+    ref = fn(csr.val, csr.col_ind, csr.row_ptr, vec, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_epilogue_not_fused_when_intermediate_escapes():
+    """If the pre-activation value is also a function output, fusing it
+    away would change observable results — the match must stay unfused."""
+    csr = csr_from_dense(random_dense_sparse(64, 64, 0.1, 0))
+    rng = np.random.default_rng(1)
+    vec = jnp.asarray(rng.standard_normal(64).astype(np.float32))
+
+    def fn(val, col, row_ptr, v):
+        row = jnp.repeat(jnp.arange(64, dtype=jnp.int32),
+                         jnp.diff(row_ptr), total_repeat_length=csr.nnz)
+        y = jax.ops.segment_sum(val * v[col], row, num_segments=64)
+        return y, jax.nn.relu(y)
+
+    acc = lilac.compile(fn, mode="host")
+    rep = acc.report_for(csr.val, csr.col_ind, csr.row_ptr, vec)
+    assert len(rep.matches) == 1
+    assert rep.matches[0].epilogue is None
+    outs = acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    refs = fn(csr.val, csr.col_ind, csr.row_ptr, vec)
+    for o, r in zip(outs, refs):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   atol=2e-3, rtol=1e-3)
+
+
+def test_fused_ell_kernel_matches_unfused_semantics():
+    from repro.core.rewrite import apply_epilogue
+    from repro.kernels.spmv_ell import ops as ell_ops
+    ell, vec = _ell_problem(96, 80, 0.15, 7)
+    rows = ell.val.shape[0]
+    bias = jnp.asarray(np.random.default_rng(8)
+                       .standard_normal(rows).astype(np.float32))
+    base = ell_ops.spmv_ell(ell.val, ell.col, vec, interpret=True)
+    for ep in ("relu", "silu", "none"):
+        fused = np.asarray(ell_ops.spmv_ell(ell.val, ell.col, vec,
+                                            epilogue=ep, bias=bias,
+                                            interpret=True))
+        ref = np.asarray(apply_epilogue(base, bias, ep))
+        np.testing.assert_allclose(fused, ref, atol=1e-6, rtol=1e-6)
+
+
+def test_fused_kernels_fall_back_on_scalar_bias():
+    """relu(spmv + 0.5) binds a scalar bias; the fused kernels tile a
+    (rows,) bias, so mis-shaped biases must take the post-kernel path
+    (correct, just unfused) instead of crashing the Pallas harness."""
+    from repro.core.rewrite import apply_epilogue
+    from repro.kernels.spmv_ell import ops as ell_ops
+    ell, vec = _ell_problem(64, 64, 0.2, 11)
+    base = ell_ops.spmv_ell(ell.val, ell.col, vec, interpret=True)
+    out = np.asarray(ell_ops.spmv_ell(ell.val, ell.col, vec,
+                                      epilogue="relu",
+                                      bias=jnp.float32(0.5),
+                                      interpret=True))
+    ref = np.asarray(apply_epilogue(base, jnp.float32(0.5), "relu"))
+    np.testing.assert_allclose(out, ref, atol=1e-6)
+
+    # end-to-end: detection binds the scalar literal, pallas.ell by
+    # explicit policy must still produce the right values
+    csr = csr_from_dense(random_dense_sparse(64, 64, 0.2, 0))
+    vec2 = jnp.asarray(np.random.default_rng(1)
+                       .standard_normal(64).astype(np.float32))
+
+    def fn(val, col, row_ptr, v):
+        row = jnp.repeat(jnp.arange(64, dtype=jnp.int32),
+                         jnp.diff(row_ptr), total_repeat_length=csr.nnz)
+        y = jax.ops.segment_sum(val * v[col], row, num_segments=64)
+        return jax.nn.relu(y + 0.5)
+
+    acc = lilac.compile(fn, mode="host", policy="pallas.ell")
+    rep = acc.report_for(csr.val, csr.col_ind, csr.row_ptr, vec2)
+    assert rep.matches and rep.matches[0].epilogue == "relu"
+    out = acc(csr.val, csr.col_ind, csr.row_ptr, vec2)
+    ref = fn(csr.val, csr.col_ind, csr.row_ptr, vec2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-3, rtol=1e-3)
+
+
+def test_fused_bsr_kernel_matches_unfused_semantics():
+    from repro.core.rewrite import apply_epilogue
+    from repro.kernels.bsr_spmm import ops as bsr_ops
+    from repro.sparse.convert import csr_to_bcsr
+    d = random_dense_sparse(256, 128, 0.2, seed=0)
+    bcsr = csr_to_bcsr(csr_from_dense(d), block_shape=(128, 128))
+    rng = np.random.default_rng(1)
+    dense = jnp.asarray(rng.standard_normal((128, 256)).astype(np.float32))
+    base = bsr_ops.bsr_spmm(bcsr, dense, interpret=True)
+    bias_r = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+    bias_c = jnp.asarray(rng.standard_normal(256).astype(np.float32))
+    for bias, kind in ((bias_r, "row"), (bias_c, "col"), (None, None)):
+        fused = np.asarray(bsr_ops.bsr_spmm(
+            bcsr, dense, epilogue="silu", bias=bias, bias_kind=kind,
+            interpret=True))
+        b = None if bias is None else (
+            np.asarray(bias)[:, None] if kind == "row"
+            else np.asarray(bias)[None, :])
+        ref = np.asarray(apply_epilogue(np.asarray(base), b, "silu"))
+        np.testing.assert_allclose(fused, ref, atol=1e-5, rtol=1e-5)
