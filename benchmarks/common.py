@@ -77,9 +77,15 @@ def problem_suite(quick: bool = False) -> Dict[str, object]:
 
 def write_json_report(path: str, report: dict):
     """Write a BENCH_*.json artifact (the perf-trajectory format: one JSON
-    object per benchmark run, uploaded by the CI bench-smoke job)."""
+    object per benchmark run, uploaded by the CI bench-smoke job).  The
+    parent directory is created, so `--out /tmp/x/BENCH.json` works
+    without losing the run to a FileNotFoundError at the very end."""
     import json
+    import os
 
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
     with open(path, "w", encoding="utf-8") as f:
         json.dump(report, f, indent=1, sort_keys=True)
     print(f"wrote {path}")

@@ -67,8 +67,15 @@ def run(reps: int = 5, iters: int = 10, quick: bool = False,
         prob_report = {"backends": {}, "shared_plan": {}}
 
         # -- classic Fig. 18: cached vs re-packed-every-call ----------------
+        # bake=False throughout this benchmark: it characterizes the DATA
+        # PLANE (per-call cache hits, repack-on-critical-path A/B via
+        # cache.clear()), which a baked plan bypasses entirely — its
+        # guards don't consult the cache, so clear() would stop meaning
+        # "repack every call".  Dispatch economics live in
+        # benchmarks/dispatch_overhead.py.
         for backend in BACKENDS:
-            acc = lilac.compile(naive, mode="host", policy=backend)
+            acc = lilac.compile(naive, mode="host", policy=backend,
+                                bake=False)
             pair = sweep({
                 "cached": lambda: _iterate(acc, csr, vec, iters),
                 "repack_every_call": lambda: _iterate(acc, csr, vec, iters,
@@ -98,7 +105,7 @@ def run(reps: int = 5, iters: int = 10, quick: bool = False,
         # -- shared plan-level cache: second backend rides the first --------
         def first_call_seconds(policy, plane):
             acc = lilac.compile(naive, mode="host", policy=policy,
-                                cache=plane)
+                                cache=plane, bake=False)
             t = timeit(lambda: acc(csr.val, csr.col_ind, csr.row_ptr, vec),
                        reps=1, warmup=0)
             return t, acc

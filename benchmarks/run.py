@@ -12,7 +12,8 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig15,fig16,tab2,fig18,tab3,roofline,kernels")
+                    help="comma list: fig15,fig16,tab2,fig18,tab3,"
+                         "dispatch,roofline,kernels")
     ap.add_argument("--fast", action="store_true",
                     help="fewer reps (CI mode)")
     args = ap.parse_args()
@@ -42,6 +43,11 @@ def main() -> None:
         from benchmarks import fig18_marshaling
         failures += _run("fig18", fig18_marshaling.run,
                          reps=2 if args.fast else 5)
+    if want("dispatch"):
+        from benchmarks import dispatch_overhead
+        failures += _run("dispatch", dispatch_overhead.run,
+                         reps=30 if args.fast else 100,
+                         quick=args.fast)
     if want("kernels"):
         from benchmarks import kernel_analysis
         failures += _run("kernels", kernel_analysis.run)

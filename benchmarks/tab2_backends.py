@@ -223,8 +223,15 @@ def run(reps: int = 10, quick: bool = False, out: str | None = None,
         accs = {}
         for backend in BACKENDS:
             try:
+                # bake=False: this sweep measures each backend's
+                # kernel+marshal economics through the interpreter (the
+                # timings seeded into the autotune cache must not include
+                # plan-dispatch effects, and the cold context's
+                # cache.clear() must actually force a repack — a baked
+                # plan's guards would ignore it).  Plan dispatch has its
+                # own benchmark: dispatch_overhead.py.
                 accs[backend] = lilac.compile(naive, mode="host",
-                                              policy=backend)
+                                              policy=backend, bake=False)
             except Exception:
                 pass
         # steady and cold fail independently: a cold-path exception

@@ -65,10 +65,18 @@ def main():
     first = time.perf_counter() - t0
     sel = spmv.last_selections[0][1] if spmv.last_selections else "<none>"
     s = tuner.stats
+    pstats = spmv.plan_info()["plan_cache_stats"] or {}
     if s.timing_calls:
         how = f"measured {s.timing_calls} candidate(s)"
     elif s.fallbacks:
         how = "platform default (tuning disabled or budget exhausted)"
+    elif ((pstats.get("memory_hits", 0) or pstats.get("disk_hits", 0))
+          and not pstats.get("rejected", 0)):
+        # the executable-plan cache outranks even the tuner's disk warm
+        # start: detection AND tuning were skipped, the persisted pins
+        # went straight into plan baking (docs/dispatch.md)
+        how = ("plan-cache warm start — detection and tuning both "
+               "skipped, pins rehydrated")
     else:
         how = "warm start — zero candidates re-timed"
     print(f"first call: {first * 1e3:.1f} ms, selected {sel} ({how})")
@@ -89,7 +97,9 @@ def main():
         print(f"trace mode under jax.jit: winner {sel} pinned at lowering")
 
     print(f"tuner stats: {s.as_dict()}")
-    print(f"cache now holds {len(tuner.cache.entries)} signature(s)")
+    print(f"autotune cache holds {len(tuner.cache.entries)} in-memory "
+          f"signature(s); baked plans: {spmv.plan_info()['baked']} "
+          f"(persisted to {spmv.plan_info()['plan_cache']})")
 
 
 if __name__ == "__main__":

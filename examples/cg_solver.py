@@ -65,10 +65,10 @@ def main():
         resid = float(np.linalg.norm(dense @ np.asarray(x) - np.asarray(b)))
         print(f"{name:22s}: {dt:7.3f}s  {k} iters  residual {resid:.2e}")
         if hasattr(fn, "cache"):
-            print(f"{'':22s}  marshaling: {fn.cache.stats.hits} hits / "
-                  f"{fn.cache.stats.misses} misses, "
-                  f"{fn.cache.stats.bytes_avoided / 1e6:.1f} MB re-transfer "
-                  f"avoided")
+            info = fn.plan_info()
+            print(f"{'':22s}  marshaled once "
+                  f"({fn.cache.stats.misses} repack misses); baked plan "
+                  f"served {info['plan_hits']} of the solver's calls")
 
 
 if __name__ == "__main__":

@@ -42,7 +42,12 @@ def main():
     jax.block_until_ready(x0)
     t_naive = time.perf_counter() - t0
 
-    spmv = lilac.compile(naive, mode="host", policy=args.policy)
+    # bake=False keeps the per-call marshaling cache live so the
+    # cache.clear() ablation below really re-packs every iteration (a
+    # baked plan hoists the repack and would ignore the clear); see
+    # docs/dispatch.md for the baked steady-state path.
+    spmv = lilac.compile(naive, mode="host", policy=args.policy,
+                         bake=False)
     jax.block_until_ready(pagerank(spmv))   # warm (includes the one repack)
     t0 = time.perf_counter()
     x1 = pagerank(spmv)

@@ -16,10 +16,12 @@ from repro.core.harness import (REGISTRY, CallCtx, DuplicateHarnessError,
 from repro.core.marshal import (FORMATS, GRAPH, SOURCES, ConversionEdge,
                                 ConversionGraph, DataPlane, MarshalingCache,
                                 MarshalPolicy, ReadObject, SparseFormat,
-                                TrackedArray, fingerprint)
+                                TrackedArray, fingerprint, version_token)
 from repro.core.pass_manager import (CompileOptions, LilacDeprecationWarning,
                                      LilacFunction, compile, lilac_accelerate,
                                      lilac_optimize)
+from repro.core.plan import (ExecutablePlan, PlanBakeError, PlanCache,
+                             PlanDonationError)
 from repro.core import spec
 from repro.core import what_lang
 
@@ -34,7 +36,8 @@ __all__ = [
     "HarnessRegistry",
     "MarshalingCache", "DataPlane", "MarshalPolicy", "SparseFormat",
     "ConversionEdge", "ConversionGraph", "FORMATS", "GRAPH", "SOURCES",
-    "ReadObject", "TrackedArray", "fingerprint",
+    "ReadObject", "TrackedArray", "fingerprint", "version_token",
     "CompileOptions", "LilacDeprecationWarning", "LilacFunction", "compile",
     "lilac_accelerate", "lilac_optimize", "spec", "what_lang",
+    "ExecutablePlan", "PlanCache", "PlanBakeError", "PlanDonationError",
 ]

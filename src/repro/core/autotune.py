@@ -476,6 +476,12 @@ def synthesize_operands(binding: Dict[str, Any], rng_seed: int = 0
 # The tuner
 # ---------------------------------------------------------------------------
 
+#: decision sources that are real tuning outcomes (measured now or served
+#: from the cache) — the only ones the pass manager pins into a rewrite or
+#: serializes into the persistent plan cache.
+DEFINITIVE_SOURCES = ("memory", "disk", "measured")
+
+
 @dataclasses.dataclass
 class Decision:
     harness: str
@@ -484,6 +490,18 @@ class Decision:
     # winning schedule variant (tune-param assignment); None when the
     # winner has no declared tune space
     schedule: Optional[Dict[str, Any]] = None
+
+    @property
+    def definitive(self) -> bool:
+        """True when this decision may be pinned/persisted: a fallback
+        (can't-measure, budget 0, tracer-only first call) must stay
+        re-tunable on later concrete calls."""
+        return self.source in DEFINITIVE_SOURCES
+
+    def as_pin(self) -> Tuple[str, Optional[Dict[str, Any]]]:
+        """The JSON-serializable ``(harness, schedule)`` pair the pass
+        manager stores in ``CompiledEntry.pins`` and the plan cache."""
+        return (self.harness, self.schedule)
 
 
 class Autotuner:

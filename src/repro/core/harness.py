@@ -94,6 +94,13 @@ class Harness:
     # binding['bias']) itself — in-register for Pallas kernels; False
     # harnesses get the epilogue applied by the rewriter after the call.
     fuse_epilogue: bool = False
+    # Opt-out for executable-plan baking (repro.core.plan): set False for
+    # a backend whose body has per-call HOST-side behavior beyond its
+    # declared marshal clauses (RNG, mutable globals, external I/O) — a
+    # baked plan would freeze the first call's behavior at trace time.
+    # Harnesses with persistent state / lifecycle hooks are treated as
+    # unbakeable automatically.
+    bakeable: bool = True
     setup: Optional[Callable] = None              # BeforeFirstExecution
     teardown: Optional[Callable] = None           # AfterLastExecution
     # Shared mutable {"up": bool} when one HARNESS block implements several
@@ -145,7 +152,14 @@ class HarnessRegistry:
         self._by_comp: Dict[str, List[Harness]] = {}
         self._defaults: Dict[Tuple[str, str], str] = {}  # (comp, platform) -> name
         self.version = version        # bump to invalidate persisted tunings
+        # monotone registration counter: unlike the fingerprint (which
+        # hashes declared metadata and cannot see a same-name body
+        # replacement via override=True), the epoch moves on EVERY
+        # register — baked executable plans compare it per dispatch so a
+        # replaced kernel is never served from a stale jitted executable
+        self.epoch = 0
         self._autotuner = None
+        self._fp_cache: Optional[Tuple[int, str]] = None  # (version, fp)
 
     def register(self, h: Harness, default_for: Tuple[str, ...] = (),
                  override: bool = False):
@@ -168,18 +182,28 @@ class HarnessRegistry:
         for plat in default_for:
             self._defaults[(h.implements, plat)] = h.name
         self._autotuner = None        # harness set changed -> new fingerprint
+        self._fp_cache = None
+        self.epoch += 1
         return h
 
     def fingerprint(self) -> str:
         """Stable hash of (version, registered harness set).  Persisted
-        tunings are invalidated whenever this changes."""
+        tunings (and executable plans) are invalidated whenever this
+        changes.  Memoized until the next ``register``/version bump: the
+        pass manager reads it per compiled function and the steady-state
+        path must not re-hash the whole registry."""
+        cached = self._fp_cache
+        if cached is not None and cached[0] == self.version:
+            return cached[1]
         import hashlib
 
         items = sorted(
             (h.implements, h.name, h.platforms, h.formats, h.jit_safe)
             for hs in self._by_comp.values() for h in hs)
         blob = repr((self.version, items)).encode()
-        return hashlib.blake2b(blob, digest_size=8).hexdigest()
+        fp = hashlib.blake2b(blob, digest_size=8).hexdigest()
+        self._fp_cache = (self.version, fp)
+        return fp
 
     @property
     def autotuner(self):

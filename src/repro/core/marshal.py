@@ -57,7 +57,7 @@ _MISSING = object()
 def fingerprint(arr: Any, exact: bool = False) -> Tuple:
     """Content fingerprint of an array (or scalar / TrackedArray)."""
     if isinstance(arr, TrackedArray):
-        return ("tracked", id(arr.base_token), arr.version)
+        return version_token(arr)   # THE O(1) token rule, defined once
     if isinstance(arr, (int, float, bool)):
         return ("scalar", arr)
     a = np.asarray(arr)
@@ -92,6 +92,17 @@ class TrackedArray:
 
 def unwrap(x):
     return x.arr if isinstance(x, TrackedArray) else x
+
+
+def version_token(x) -> Tuple:
+    """O(1) change token for executable-plan guards (``repro.core.plan``):
+    a TrackedArray yields its (base-token id, version) pair — a functional
+    update bumps it — while plain (immutable) arrays yield their object
+    identity, which proves content identity for jax arrays.  Unlike
+    :func:`fingerprint`, no bytes are ever read."""
+    if isinstance(x, TrackedArray):
+        return ("tracked", id(x.base_token), x.version)
+    return ("id", id(x))
 
 
 def nbytes_of(x) -> int:

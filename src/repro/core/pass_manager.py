@@ -16,7 +16,14 @@ carries the full configuration.
     Use for solver-style apps that call the step repeatedly.
 
 Both share: trace -> normalize -> detect (backtracking) -> rewrite.
-Detection runs once per input-shape signature and is cached.
+Detection runs once per input-shape signature and is cached — and, when
+the persistent plan cache (``repro.core.plan``) holds a record for the
+jaxpr, it is skipped entirely: matches and autotune pins rehydrate from
+disk.  Once every match has a definitive ``(harness, schedule)`` decision
+and a concrete call has run, the rewrite is *baked* into an
+:class:`~repro.core.plan.ExecutablePlan` — steady-state dispatch becomes a
+guard check plus one ``jax.jit`` call instead of the eqn-by-eqn
+interpreter (see ``docs/dispatch.md``).
 
 ``lilac_optimize`` / ``lilac_accelerate`` are deprecation shims over
 ``compile`` kept for out-of-repo callers; they warn with
@@ -30,12 +37,14 @@ import warnings
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
-import numpy as np
 
 from repro.core import detect as D
 from repro.core import harness as H
-from repro.core.marshal import DataPlane, MarshalingCache, MarshalPolicy
-from repro.core.rewrite import run_rewritten
+from repro.core import plan as P
+from repro.core.autotune import autotune_disabled
+from repro.core.marshal import (DataPlane, MarshalingCache, MarshalPolicy,
+                                TrackedArray)
+from repro.core.rewrite import needed_eqn_ids, run_rewritten
 
 
 @dataclasses.dataclass
@@ -49,16 +58,41 @@ class CompiledEntry:
     # kernel schedule — without consulting the tuner again.
     pins: Dict[int, Tuple[str, Optional[Dict[str, Any]]]] = \
         dataclasses.field(default_factory=dict)
+    # id(anchor eqn) -> match index, built once at entry construction (the
+    # pinned-select path used to rebuild it per call)
+    idx_of: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # persistent-plan-cache plumbing
+    cache_key: Optional[str] = None
+    persisted: bool = False
+    # the baked executable plan (None until the rewrite is resolved and a
+    # concrete call has run; see docs/dispatch.md for the lifecycle)
+    plan: Optional[P.ExecutablePlan] = None
+    no_bake: bool = False
+    bake_error: Optional[str] = None
+    rebakes: int = 0
+    # memoized liveness (rewrite.needed_eqn_ids) for the full match list
+    # and for the enabled=False baseline
+    _needed_full: Optional[frozenset] = None
+    _needed_empty: Optional[frozenset] = None
+
+    def needed_for(self, matches) -> frozenset:
+        if matches:
+            if self._needed_full is None:
+                self._needed_full = needed_eqn_ids(self.closed_jaxpr, matches)
+            return self._needed_full
+        if self._needed_empty is None:
+            self._needed_empty = needed_eqn_ids(self.closed_jaxpr, [])
+        return self._needed_empty
 
 
 def _signature(flat_args) -> Tuple:
-    sig = []
-    for a in flat_args:
-        if hasattr(a, "shape") and hasattr(a, "dtype"):
-            sig.append((tuple(a.shape), str(a.dtype)))
-        else:
-            sig.append(("py", type(a).__name__, a if isinstance(a, (int, bool)) else None))
-    return tuple(sig)
+    """Hashable compile-dict key, derived from the single leaf-keying
+    source (``plan.leaf_templates`` — also the basis of the last-entry
+    fast path and the baked-plan guard specs) so the layers cannot
+    drift."""
+    return tuple(
+        (t[1], str(t[2])) if t[0] == "a" else ("py", t[1].__name__, t[2])
+        for t in P.leaf_templates(flat_args))
 
 
 class LilacFunction:
@@ -71,7 +105,10 @@ class LilacFunction:
                  platform: Optional[str] = None,
                  cache: Optional[MarshalingCache] = None,
                  marshal_policy=None,
-                 enabled: bool = True):
+                 enabled: bool = True,
+                 bake: bool = True,
+                 plan_cache: Any = None,
+                 donate_args: Tuple[int, ...] = ()):
         assert mode in ("trace", "host")
         self.fn = fn
         self.mode = mode
@@ -88,8 +125,14 @@ class LilacFunction:
             self.cache = DataPlane(policy=self.marshal_policy)
         else:
             self.cache = None       # every call repacks (A/B baseline)
-        self.enabled = enabled
+        self.enabled = bool(enabled)
+        self.bake_enabled = bool(bake)
+        self.donate_args = tuple(donate_args or ())
+        self._plan_cache_injected = isinstance(plan_cache, P.PlanCache)
+        self._plan_cache = self._make_plan_cache(plan_cache)
         self._compiled: Dict[Tuple, CompiledEntry] = {}
+        self._last_compiled: Optional[Tuple] = None  # (entry, in_tree, tmpl)
+        self._last_plan: Optional[P.ExecutablePlan] = None
         self.last_report: Optional[D.DetectionReport] = None
         # (match, harness-name) pairs from the most recent call, in anchor
         # order — what actually ran, for benchmarks and tests.
@@ -99,20 +142,131 @@ class LilacFunction:
         # swept schedule a plan actually used.
         self.last_schedules: List[Optional[Dict[str, Any]]] = []
 
+    def _make_plan_cache(self, opt) -> Optional[P.PlanCache]:
+        if opt is False or (isinstance(opt, str)
+                            and opt in ("off", "none", "disabled")):
+            return None
+        if isinstance(opt, P.PlanCache):
+            return opt
+        if opt in (None, True, "default", "on"):
+            # only the default resolution honors the env kill-switch: an
+            # explicitly passed path (like an injected instance) is a
+            # stronger statement of intent than LILAC_PLAN_CACHE_DISABLE
+            if P.plan_cache_disabled():
+                return None
+            return P.shared_plan_cache(None, self.registry.fingerprint())
+        return P.shared_plan_cache(opt, self.registry.fingerprint())
+
     # -- compilation ---------------------------------------------------------
 
-    def _compile(self, args, kwargs) -> Tuple[CompiledEntry, List[Any]]:
-        flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
-        key = (_signature(flat), in_tree)
-        entry = self._compiled.get(key)
-        if entry is None:
-            cj, out_shape = jax.make_jaxpr(self.fn, return_shape=True)(*args, **kwargs)
-            ncj = D.normalize_closed_jaxpr(cj)
+    def _validated_pins(self, raw: Dict[str, Any], matches) -> Dict[int, Tuple]:
+        """Pins rehydrated from the plan cache, checked against the live
+        registry: a vanished harness or a schedule outside the harness's
+        current tune space drops the pin (the autotune policy re-tunes it)
+        rather than ever pinning something unservable."""
+        pins: Dict[int, Tuple] = {}
+        for k, v in (raw or {}).items():
+            try:
+                i, name, schedule = int(k), v[0], v[1]
+            except (TypeError, ValueError, IndexError):
+                continue
+            if not (0 <= i < len(matches)):
+                continue
+            try:
+                h = self.registry.get(matches[i].computation, name)
+            except KeyError:
+                continue
+            if schedule is not None and schedule not in (h.schedules or ()):
+                continue
+            pins[i] = (name, schedule)
+        return pins
+
+    def _build_entry(self, args, kwargs) -> CompiledEntry:
+        cj, out_shape = jax.make_jaxpr(self.fn, return_shape=True)(*args, **kwargs)
+        ncj = D.normalize_closed_jaxpr(cj)
+        out_tree = jax.tree_util.tree_structure(out_shape)
+        cache_key = None
+        report = None
+        pins: Dict[int, Tuple] = {}
+        served = False
+        pc = self._plan_cache
+        if pc is not None and not self._plan_cache_injected \
+                and pc.registry_fingerprint != self.registry.fingerprint():
+            # specs registered since this LilacFunction was built: re-key
+            # the cache view so stale plans invalidate, fresh ones persist
+            pc = self._plan_cache = P.shared_plan_cache(
+                pc.path, self.registry.fingerprint())
+        if pc is not None:
+            cache_key = P.plan_key(ncj, self.platform, self.mode,
+                                   self.policy,
+                                   reuse=self.marshal_policy.reuse)
+            rec = pc.get(cache_key)
+            if rec is not None:
+                got = None
+                # integrity first: every schema-1 record carries n_eqns +
+                # detect_digest, so both must be present AND agree with
+                # the record's own matches / the live jaxpr before any
+                # atom reference is resolved — truncated or hand-edited
+                # records reject here
+                ser = rec.get("matches", ())
+                intact = (rec.get("n_eqns") == len(ncj.jaxpr.eqns)
+                          and rec.get("detect_digest")
+                          == P.detect_digest(ser))
+                if intact:
+                    got = P.rehydrate_matches(ncj, ser)
+                if got is not None:
+                    report = D.DetectionReport(
+                        got, n_eqns=len(ncj.jaxpr.eqns),
+                        log=["rehydrated from plan cache "
+                             "(detection + tuning skipped)"])
+                    pins = self._validated_pins(rec.get("pins"), got)
+                    served = True
+                else:
+                    pc.stats.rejected += 1
+        if report is None:
             report = self.detector.detect(ncj, normalize=False)
-            out_tree = jax.tree_util.tree_structure(out_shape)
-            entry = CompiledEntry(ncj, report, out_tree)
-            self._compiled[key] = entry
+        entry = CompiledEntry(ncj, report, out_tree)
+        entry.pins = pins
+        entry.idx_of = {id(m.anchor_eqn): i
+                        for i, m in enumerate(report.matches)}
+        entry.cache_key = cache_key
+        # a served record with complete pins never re-persists; a served
+        # record whose pins were dropped (or never tuned) re-persists once
+        # this process resolves them
+        entry.persisted = served and (
+            self.policy != "autotune" or not report.matches
+            or len(pins) == len(report.matches))
+        return entry
+
+    def _entry_for(self, args, kwargs, flat, in_tree) -> CompiledEntry:
+        last = self._last_compiled
+        if (last is not None and last[1] == in_tree
+                and P.leaves_match(last[2], flat)):
+            entry = last[0]
+        else:
+            key = (_signature(flat), in_tree)
+            entry = self._compiled.get(key)
+            if entry is None:
+                entry = self._build_entry(args, kwargs)
+                self._compiled[key] = entry
+            self._last_compiled = (entry, in_tree, P.leaf_templates(flat))
         self.last_report = entry.report
+        return entry
+
+    def _prepare(self, args, kwargs, flat=None, in_tree=None):
+        """Flatten, unwrap TrackedArray leaves, resolve the CompiledEntry.
+        Returns (entry, raw leaves, unwrapped leaves, in_tree)."""
+        if flat is None:
+            flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        raw_flat = flat
+        if any(isinstance(x, TrackedArray) for x in flat):
+            flat = [x.arr if isinstance(x, TrackedArray) else x for x in flat]
+            args, kwargs = jax.tree_util.tree_unflatten(in_tree, flat)
+        entry = self._entry_for(args, kwargs, flat, in_tree)
+        return entry, raw_flat, flat, in_tree
+
+    def _compile(self, args, kwargs) -> Tuple[CompiledEntry, List[Any]]:
+        entry, _, flat, _ = self._prepare(args, kwargs)
         return entry, flat
 
     def report_for(self, *args, **kwargs) -> D.DetectionReport:
@@ -133,7 +287,7 @@ class LilacFunction:
         or cache-hit) so a can't-measure fallback — e.g. the very first
         call happening under a user's jit trace — stays re-tunable on later
         concrete calls."""
-        idx_of = {id(m.anchor_eqn): i for i, m in enumerate(entry.report.matches)}
+        idx_of = entry.idx_of
 
         def select(m: D.Match, binding=None, ctx=None) -> H.Harness:
             i = idx_of[id(m.anchor_eqn)]
@@ -150,8 +304,8 @@ class LilacFunction:
             h = self._select(m, binding, ctx)
             tuner = self.registry.autotuner
             dec = tuner.last_decision
-            if dec is not None and dec.source in ("memory", "disk", "measured"):
-                entry.pins[i] = (h.name, dec.schedule)
+            if dec is not None and dec.definitive:
+                entry.pins[i] = dec.as_pin()
             return h
 
         return select
@@ -160,21 +314,215 @@ class LilacFunction:
         return H.CallCtx(mode=self.mode, cache=self.cache, format=m.format,
                          platform=self.platform, epilogue=m.epilogue)
 
+    def _dispatch_plan(self, plan: P.ExecutablePlan, leaves):
+        plan.hits += 1
+        self.last_report = plan.report
+        self.last_selections = plan.selections
+        self.last_schedules = plan.schedules
+        outs = plan.jitted(*leaves)
+        return jax.tree_util.tree_unflatten(plan.out_tree, outs)
+
     def __call__(self, *args, **kwargs):
-        entry, flat = self._compile(args, kwargs)
+        flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
+        # steady-state fast path: guard check -> one jitted dispatch.
+        # A registry epoch moved by any (re-)registration refuses the
+        # plan: a replaced harness body must never be served from a
+        # stale jitted executable.
+        epoch = self.registry.epoch
+        plan = self._last_plan
+        if plan is not None and plan.registry_epoch == epoch:
+            leaves = plan.match_and_unwrap(in_tree, flat, self.enabled)
+            if leaves is not None:
+                return self._dispatch_plan(plan, leaves)
+        entry, raw_flat, uflat, in_tree = self._prepare(
+            args, kwargs, flat, in_tree)
+        # second chance: another signature's plan was hot; this entry may
+        # still hold a valid one
+        plan = entry.plan
+        if (plan is not None and plan is not self._last_plan
+                and plan.registry_epoch == epoch):
+            leaves = plan.match_and_unwrap(in_tree, raw_flat, self.enabled)
+            if leaves is not None:
+                self._last_plan = plan
+                return self._dispatch_plan(plan, leaves)
+
         matches = entry.report.matches if self.enabled else []
         select = (self._pinned_select(entry) if self.policy == "autotune"
                   else self._select)
+        concrete = not any(isinstance(x, jax.core.Tracer) for x in uflat)
+        recorder = (P.PlanRecorder()
+                    if self.bake_enabled and concrete and not entry.no_bake
+                    else None)
+
+        def ctx_factory(m):
+            ctx = self._ctx_factory(m)
+            if recorder is not None:
+                ctx.cache = P.recording_cache(ctx.cache,
+                                              recorder.slot(m).buffers)
+            return ctx
+
         selections: List[Tuple[D.Match, str]] = []
         schedules: List[Optional[Dict[str, Any]]] = []
+
+        def on_select(m, h, ctx):
+            selections.append((m, h.name))
+            sched = getattr(ctx, "schedule", None)
+            schedules.append(sched)
+            if recorder is not None:
+                recorder.begin(m, h, sched)
+
         outs = run_rewritten(
-            entry.closed_jaxpr, matches, select, flat, self._ctx_factory,
-            on_select=lambda m, h, ctx: (
-                selections.append((m, h.name)),
-                schedules.append(getattr(ctx, "schedule", None))))
+            entry.closed_jaxpr, matches, select, uflat, ctx_factory,
+            on_select=on_select, needed=entry.needed_for(matches))
         self.last_selections = selections
         self.last_schedules = schedules
+        self._maybe_persist(entry)
+        if recorder is not None:
+            self._maybe_bake(entry, matches, recorder, raw_flat, uflat,
+                             in_tree)
         return jax.tree_util.tree_unflatten(entry.out_tree, outs)
+
+    # -- plan lifecycle ------------------------------------------------------
+
+    def _resolved(self, entry: CompiledEntry, matches) -> bool:
+        """A rewrite is resolved once every selection is definitive: always
+        for explicit/default policies, for autotune once every match is
+        pinned (or tuning is disabled, making defaults deterministic)."""
+        if self.policy != "autotune" or not matches:
+            return True
+        return len(entry.pins) == len(matches) or autotune_disabled()
+
+    def _maybe_persist(self, entry: CompiledEntry):
+        pc = self._plan_cache
+        if pc is None or entry.persisted or entry.cache_key is None:
+            return
+        matches = entry.report.matches
+        if not self._resolved(entry, matches):
+            return
+        try:
+            ser = P.serialize_matches(entry.closed_jaxpr, matches)
+        except Exception:
+            entry.persisted = True      # unaddressable match: don't retry
+            return
+        entry.persisted = True
+        pc.put(entry.cache_key, {
+            "matches": ser,
+            "n_eqns": len(entry.closed_jaxpr.jaxpr.eqns),
+            "detect_digest": P.detect_digest(ser),
+            "pins": {str(i): [n, s] for i, (n, s) in entry.pins.items()},
+        })
+
+    def _disable_bake(self, entry: CompiledEntry, reason: str):
+        """Stop baking this entry AND drop any existing plan: a retired
+        plan would otherwise keep its jitted executable, hoisted device
+        buffers and strong operand references resident (a silent leak on
+        exactly the churning workloads baking gets disabled for) while
+        its guards are certain to keep failing."""
+        entry.no_bake = True
+        entry.bake_error = reason
+        if entry.plan is not None:
+            if self._last_plan is entry.plan:
+                self._last_plan = None
+            entry.plan = None
+
+    def _maybe_bake(self, entry: CompiledEntry, matches,
+                    recorder: P.PlanRecorder, raw_flat, flat, in_tree):
+        if entry.no_bake or not self._resolved(entry, matches):
+            return
+        if not recorder.complete_for(matches):
+            return
+        # marshal_policy='off' promises "every call repacks" (the A/B
+        # always-fresh baseline): hoisting a recorded repack into a plan
+        # would silently reinstate caching, so any marshal-bearing
+        # selection blocks baking under it
+        if self.cache is None and any(
+                s.buffers for s in recorder.slots.values()):
+            self._disable_bake(entry, "marshal_policy='off' forbids "
+                               "hoisting repacks; interpreter repacks "
+                               "every call")
+            return
+        # stateful / opted-out backends: a baked plan freezes per-call
+        # host-side behavior at trace time, so only bake bodies whose
+        # host part is entirely their declared marshal clauses
+        for m in matches:
+            h = recorder.slots[id(m.anchor_eqn)].harness
+            if (not getattr(h, "bakeable", True) or h.setup is not None
+                    or h.teardown is not None or h.persistent):
+                self._disable_bake(
+                    entry, f"harness {h.name!r} is stateful or opted out "
+                           f"of baking (bakeable=False / lifecycle hooks "
+                           f"/ persistent)")
+                return
+        plan = entry.plan
+        if plan is not None:
+            if (plan.enabled == self.enabled and plan.consts_ok()
+                    and plan.registry_epoch == self.registry.epoch
+                    and plan.same_hoisted(recorder)):
+                # content-identical operands under new identities (e.g. an
+                # equal re-upload): the data plane served the same buffers,
+                # so only the guards move — no re-trace, no re-compile
+                plan.refresh_guards(raw_flat)
+                self._last_plan = plan
+                return
+            if entry.rebakes >= 4 and plan.hits == 0:
+                # operands churn faster than the plan pays off: stop
+                # recompiling and stay on the interpreter
+                self._disable_bake(
+                    entry, "rebake thrash (operands change per call)")
+                return
+        try:
+            baked = P.bake_plan(
+                closed_jaxpr=entry.closed_jaxpr, matches=matches,
+                needed=entry.needed_for(matches), recorder=recorder,
+                raw_flat=raw_flat, flat=flat, in_tree=in_tree,
+                out_tree=entry.out_tree, report=entry.report,
+                mode=self.mode, platform=self.platform,
+                enabled=self.enabled, donate=self.donate_args,
+                registry_epoch=self.registry.epoch)
+        except P.PlanDonationError:
+            raise                       # user error: surface it
+        except Exception as e:          # untraceable body etc: interpreter
+            self._disable_bake(entry, repr(e))
+            return
+        if plan is not None:
+            entry.rebakes += 1
+        entry.plan = baked
+        self._last_plan = baked
+
+    def invalidate_plans(self):
+        """Drop every baked plan (not the persistent cache): the next call
+        per signature re-records and re-bakes.  Use after mutating harness
+        persistent state or releasing backends out-of-band."""
+        for entry in self._compiled.values():
+            entry.plan = None
+            entry.no_bake = False
+            entry.bake_error = None
+            entry.rebakes = 0     # fresh thrash tolerance, as documented
+        self._last_plan = None
+
+    def executable_plan(self, *args, **kwargs) -> Optional[P.ExecutablePlan]:
+        """The baked plan serving this call signature, or None (not yet
+        resolved / bake disabled / unbakeable).  For benchmarks and tests;
+        does not execute anything."""
+        entry, _, _, _ = self._prepare(args, kwargs)
+        return entry.plan
+
+    def plan_info(self) -> Dict[str, Any]:
+        """Introspection for benchmarks/tests: bake status per function."""
+        entries = list(self._compiled.values())
+        plans = [e.plan for e in entries if e.plan is not None]
+        return {
+            "entries": len(entries),
+            "baked": len(plans),
+            "plan_hits": sum(p.hits for p in plans),
+            "rebakes": sum(e.rebakes for e in entries),
+            "no_bake": sum(1 for e in entries if e.no_bake),
+            "bake_errors": [e.bake_error for e in entries if e.bake_error],
+            "plan_cache": (str(self._plan_cache.path)
+                           if self._plan_cache is not None else None),
+            "plan_cache_stats": (self._plan_cache.stats.as_dict()
+                                 if self._plan_cache is not None else None),
+        }
 
 
 class LilacDeprecationWarning(DeprecationWarning):
@@ -197,6 +545,18 @@ class CompileOptions:
                   (no caching — every call repacks).  The policy's
                   ``reuse`` is the declared call frequency the autotuner
                   amortizes repack cost at.
+    ``bake``      True (default) bakes resolved rewrites into jitted
+                  :class:`~repro.core.plan.ExecutablePlan`s; False keeps
+                  the eqn-interpreter on every call (the A/B baseline for
+                  dispatch-overhead benchmarks).
+    ``plan_cache``  persistent plan cache: None/'default' resolves
+                  ``LILAC_PLAN_CACHE`` (default ~/.cache/lilac/plans.json),
+                  'off'/False disables persistence, a path or
+                  :class:`~repro.core.plan.PlanCache` injects one.
+    ``donate_args``  flat argument positions donated to the baked plan's
+                  XLA executable (output may alias their buffers).  Only
+                  donate operands you never reuse after the call; positions
+                  feeding marshaled operands are rejected.
     ``registry``/``detector``/``cache``  dependency injection for tests
                   and benchmarks; None picks the global instances.  Pass
                   the same DataPlane as ``cache`` to several compiled
@@ -207,6 +567,9 @@ class CompileOptions:
     platform: Optional[str] = None
     enabled: bool = True
     marshal_policy: Optional[Any] = None
+    bake: bool = True
+    plan_cache: Any = None
+    donate_args: Tuple[int, ...] = ()
     registry: Optional[H.HarnessRegistry] = None
     detector: Optional[D.Detector] = None
     cache: Optional[MarshalingCache] = None
@@ -239,7 +602,9 @@ def compile(fn: Optional[Callable] = None, *,
                          registry=opts.registry, detector=opts.detector,
                          platform=opts.platform, cache=opts.cache,
                          marshal_policy=opts.marshal_policy,
-                         enabled=opts.enabled)
+                         enabled=opts.enabled, bake=opts.bake,
+                         plan_cache=opts.plan_cache,
+                         donate_args=opts.donate_args)
 
 
 def lilac_optimize(fn: Callable, **kw) -> LilacFunction:

@@ -22,25 +22,36 @@ from repro.core.detect import Match
 from repro.core.harness import CallCtx, Harness
 
 
-def _dead_eqns(jaxpr, matches: List[Match]) -> set:
-    """Equations whose outputs are consumed only (transitively) by matched
-    anchor equations' replaced inputs — safe to skip in host mode."""
+def needed_eqn_ids(closed_jaxpr, matches: List[Match]) -> frozenset:
+    """``id``s of the equations the rewritten program must still evaluate:
+    everything live through the function outputs or a harness binding atom,
+    minus the replaced anchors and the producers that only fed them.
+
+    Pure function of ``(closed_jaxpr, matches)`` — the pass manager
+    memoizes it per ``CompiledEntry`` so repeat host-mode calls (and every
+    baked-plan trace) skip the backward liveness walk."""
+    jaxpr = closed_jaxpr.jaxpr
     anchor_ids = {id(m.anchor_eqn) for m in matches}
-    needed: set = set()
-    # live outvars of the function itself
+    # keep anything a harness binding refers to
+    binding_atoms = set()
+    for m in matches:
+        for v in m.binding.values():
+            # Literals (e.g. a scalar epilogue bias) are constants: they
+            # need no liveness root and are unhashable anyway
+            if not isinstance(v, (int, float, bool, jex_core.Literal)):
+                binding_atoms.add(v)
     live = {v for v in jaxpr.outvars if not isinstance(v, jex_core.Literal)}
-    # walk equations backwards computing liveness
+    live |= binding_atoms
+    needed = set()
     for eqn in reversed(jaxpr.eqns):
         if id(eqn) in anchor_ids:
-            # anchor eqn itself is replaced; its *binding* atoms stay live —
-            # they are added by the caller (binding_atoms) below.
             continue
         if any(ov in live for ov in eqn.outvars):
             needed.add(id(eqn))
             for iv in eqn.invars:
                 if not isinstance(iv, jex_core.Literal):
                     live.add(iv)
-    return {id(e) for e in jaxpr.eqns} - needed - anchor_ids
+    return frozenset(needed)
 
 
 def run_rewritten(closed_jaxpr,
@@ -49,6 +60,7 @@ def run_rewritten(closed_jaxpr,
                   args: List[Any],
                   ctx_factory: Callable[[Match], CallCtx],
                   on_select: Optional[Callable[[Match, Harness], None]] = None,
+                  needed: Optional[frozenset] = None,
                   ) -> List[Any]:
     """Evaluate ``closed_jaxpr`` with matched anchors replaced by harness
     calls.  Traceable: under jit this builds the rewritten HLO.
@@ -56,7 +68,10 @@ def run_rewritten(closed_jaxpr,
     ``on_select`` (if given) observes every (match, chosen harness, call
     ctx) triple — the pass manager uses it to pin autotuned winners (and
     their schedule variants, carried on ``ctx.schedule``) into the rewrite
-    and benchmarks use it to report which backend actually ran."""
+    and benchmarks use it to report which backend actually ran.
+
+    ``needed`` (if given) is a precomputed :func:`needed_eqn_ids` result
+    for exactly this ``(closed_jaxpr, matches)`` pair."""
     jaxpr = closed_jaxpr.jaxpr
     env: Dict[Any, Any] = {}
 
@@ -75,32 +90,8 @@ def run_rewritten(closed_jaxpr,
         write(iv, a)
 
     anchor_map = {id(m.anchor_eqn): m for m in matches}
-    # liveness: skip producers that only feed replaced anchors, but keep
-    # anything a harness binding refers to.
-    binding_atoms = set()
-    for m in matches:
-        for v in m.binding.values():
-            # Literals (e.g. a scalar epilogue bias) are constants: they
-            # need no liveness root and are unhashable anyway
-            if not isinstance(v, (int, float, bool, jex_core.Literal)):
-                binding_atoms.add(v)
-    dead = _dead_eqns(jaxpr, matches)
-    dead = {eid for eid in dead
-            if not any(ov in binding_atoms
-                       for e in jaxpr.eqns if id(e) == eid
-                       for ov in e.outvars)}
-    # recompute liveness including binding atoms as roots
-    live = {v for v in jaxpr.outvars if not isinstance(v, jex_core.Literal)}
-    live |= binding_atoms
-    needed = set()
-    for eqn in reversed(jaxpr.eqns):
-        if id(eqn) in anchor_map:
-            continue
-        if any(ov in live for ov in eqn.outvars):
-            needed.add(id(eqn))
-            for iv in eqn.invars:
-                if not isinstance(iv, jex_core.Literal):
-                    live.add(iv)
+    if needed is None:
+        needed = needed_eqn_ids(closed_jaxpr, matches)
 
     for eqn in jaxpr.eqns:
         m = anchor_map.get(id(eqn))

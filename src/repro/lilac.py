@@ -34,10 +34,12 @@ from repro.core.marshal import (FORMATS, GRAPH, SOURCES, ConversionEdge,
                                 ConversionGraph, DataPlane, MarshalingCache,
                                 MarshalPolicy, ReadObject, SparseFormat,
                                 TrackedArray, edge, register_format,
-                                register_source)
+                                register_source, version_token)
 from repro.core.pass_manager import (CompileOptions, LilacDeprecationWarning,
                                      LilacFunction, compile, lilac_accelerate,
                                      lilac_optimize)
+from repro.core.plan import (ExecutablePlan, PlanBakeError, PlanCache,
+                             PlanDonationError, default_plan_cache_path)
 from repro.core.spec import (HOOKS, REPACKS, SpecError, build_harnesses,
                              harness, hook, register_builtins, register_spec,
                              repack)
@@ -60,9 +62,13 @@ __all__ = [
     "Constraint", "enumerate_schedules", "BUILTINS", "BUILTIN_SPECS",
     # tunable schedules / epilogues
     "apply_epilogue",
+    # executable plans (steady-state dispatch)
+    "ExecutablePlan", "PlanCache", "PlanBakeError", "PlanDonationError",
+    "default_plan_cache_path",
     # registry / runtime
     "REGISTRY", "Harness", "HarnessRegistry", "DuplicateHarnessError",
     "CallCtx", "MarshalingCache", "ReadObject", "TrackedArray",
+    "version_token",
     # data plane
     "DataPlane", "MarshalPolicy", "SparseFormat", "ConversionEdge",
     "ConversionGraph", "FORMATS", "GRAPH", "SOURCES", "edge",

@@ -12,12 +12,17 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 @pytest.fixture(autouse=True)
 def _isolated_autotune_cache(tmp_path, monkeypatch):
-    """Keep autotune persistence out of ~/.cache during tests: every test
-    gets a private cache file and a fresh tuner on the global registry."""
+    """Keep autotune AND executable-plan persistence out of ~/.cache during
+    tests: every test gets private cache files and a fresh tuner on the
+    global registry."""
     monkeypatch.setenv("LILAC_AUTOTUNE_CACHE",
                        str(tmp_path / "autotune.json"))
+    monkeypatch.setenv("LILAC_PLAN_CACHE", str(tmp_path / "plans.json"))
     from repro.core.harness import REGISTRY
+    from repro.core.plan import reset_shared_plan_caches
 
     REGISTRY.reset_autotuner()
+    reset_shared_plan_caches()
     yield
     REGISTRY.reset_autotuner()
+    reset_shared_plan_caches()

@@ -319,6 +319,11 @@ def test_autotune_persists_across_processes(tmp_path):
     cache = tmp_path / "autotune.json"
     env = dict(os.environ,
                LILAC_AUTOTUNE_CACHE=str(cache),
+               # this test exercises the TUNER's own persistence: disable
+               # the executable-plan cache, whose rehydrated pins would
+               # otherwise skip the tuner in the second process entirely
+               # (that path has its own test in test_dispatch.py)
+               LILAC_PLAN_CACHE_DISABLE="1",
                PYTHONPATH=os.pathsep.join(
                    [os.path.join(ROOT, "src"),
                     os.environ.get("PYTHONPATH", "")]).rstrip(os.pathsep))

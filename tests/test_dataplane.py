@@ -112,10 +112,13 @@ def test_plan_cache_shared_across_two_harnesses():
         return jax.ops.segment_sum(val * vec[col], row, num_segments=32)
 
     plane = lilac.DataPlane()
+    # bake=False: this test asserts the INTERPRETER path's per-call cache
+    # accounting; a baked plan hoists the buffers and never consults the
+    # plane again (that fast path is covered in test_dispatch.py)
     dense_f = lilac.compile(naive, mode="host", policy="jnp.dense",
-                            cache=plane)
+                            cache=plane, bake=False)
     bcsr_f = lilac.compile(naive, mode="host", policy="jnp.bcsr",
-                           cache=plane)
+                           cache=plane, bake=False)
     out_d = dense_f(csr.val, csr.col_ind, csr.row_ptr, vec)
     loader_runs = plane.stats.loader_runs
     out_b = bcsr_f(csr.val, csr.col_ind, csr.row_ptr, vec)

@@ -55,16 +55,32 @@ def test_cg_solver_accelerated_converges():
 
 def test_pagerank_accelerated():
     """PageRank: repeated SpMV with the SAME matrix — the marshaling cache
-    must convert once and hit on every subsequent iteration (Fig. 18)."""
+    must convert once and hit on every subsequent iteration (Fig. 18).
+    ``bake=False`` pins the interpreter path whose per-call cache hits the
+    assertions count; with baking on (the default) the repeat calls skip
+    the cache entirely via the baked plan, asserted alongside."""
     g = random_graph_csr(64, avg_degree=6, seed=3)
     n = g.rows
-    spmv = lilac.compile(_naive_spmv_fn(n, g.nnz), mode="host", policy="jnp.ell")
+    spmv = lilac.compile(_naive_spmv_fn(n, g.nnz), mode="host",
+                         policy="jnp.ell", bake=False)
     x = jnp.ones(n) / n
     for _ in range(20):
         x = 0.85 * spmv(g.val, g.col_ind, g.row_ptr, x) + 0.15 / n
     assert abs(float(x.sum()) - 1.0) < 0.2
     st = spmv.cache.stats
     assert st.misses == 1 and st.hits == 19
+
+    # the baked path reaches the same fixed point with ONE cache miss and
+    # zero further marshal-cache traffic (the repack is hoisted)
+    fast = lilac.compile(_naive_spmv_fn(n, g.nnz), mode="host",
+                         policy="jnp.ell")
+    y = jnp.ones(n) / n
+    for _ in range(20):
+        y = 0.85 * fast(g.val, g.col_ind, g.row_ptr, y) + 0.15 / n
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-5,
+                               atol=1e-6)
+    assert fast.cache.stats.misses == 1
+    assert fast.plan_info()["plan_hits"] == 19
 
 
 def test_bfs_accelerated():
