@@ -1,0 +1,162 @@
+"""End-to-end sparse-MoE training step: ``lilac.compile(jax.grad(...))``
+vs the dense-dispatch baseline (the transform-composition story of
+docs/transforms.md, measured).
+
+The composition under test is the one ``make_train_step(lilac_grad=True)``
+builds in the real trainer:
+
+* the loss calls an *inner* lilac-compiled MoE block — detection replaces
+  the naive dense dispatch (E·T token-expert pairs) with the
+  capacity-bucket harness (E·C, C = ceil(T·K/E · cf)), which is natively
+  differentiable, so jax.grad pulls the cotangent through the *sparse*
+  dispatch: the backward costs E·C too, not E·T;
+* the *outer* ``lilac.compile`` wraps the whole ``value_and_grad`` +
+  SGD update: the gradient jaxpr is detected/rewritten as a unit and —
+  once resolved — baked into one jitted ExecutablePlan, so steady-state
+  training dispatch is a guard check + one jitted call.
+
+Reported gates (CI bench-smoke):
+
+  speedup                     lilac step time / dense step time > 1
+  grads_match_dense_oracle    max rel grad err vs jax.jit(dense) < tol
+  baked                       the train step reached a baked plan
+
+Routing is balanced (idx = arange % E) so no token exceeds capacity and
+the capacity-bucket gradients are bit-for-bit the dense oracle's up to
+f32 reassociation (tolerance 2e-4 relative).
+
+CLI:
+    python benchmarks/train_e2e.py [--quick] [--reps N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import platform as _platform
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit, write_json_report
+from repro import lilac
+from repro.models.layers import _moe_naive_2d
+
+GRAD_RTOL = 2e-4
+LR = 1e-2
+
+
+def _problem(quick: bool):
+    T, D, F, E, K = (256, 32, 64, 8, 1) if quick else (1024, 64, 128, 8, 1)
+    rng = np.random.default_rng(0)
+    params = {
+        "wg": jnp.asarray(rng.standard_normal((E, D, F)).astype(np.float32) * .1),
+        "wu": jnp.asarray(rng.standard_normal((E, D, F)).astype(np.float32) * .1),
+        "wd": jnp.asarray(rng.standard_normal((E, F, D)).astype(np.float32) * .1),
+    }
+    x = jnp.asarray(rng.standard_normal((T, D)).astype(np.float32))
+    gate = jnp.asarray(rng.random((T, K)).astype(np.float32))
+    # balanced routing: every expert sees exactly T*K/E tokens, so the
+    # capacity buckets (cf=2) never drop — grads match the dense oracle
+    idx = jnp.asarray((np.arange(T * K).reshape(T, K) % E).astype(np.int32))
+    target = jnp.asarray(rng.standard_normal((T, D)).astype(np.float32))
+    return dict(T=T, D=D, F=F, E=E, K=K), params, x, gate, idx, target
+
+
+def _make_steps(idx, target):
+    """(lilac train step, dense-baseline train step, inner LilacFunction)."""
+    inner = lilac.compile(_moe_naive_2d)
+
+    def loss_lilac(params, x, gate):
+        out = inner(x, gate, idx, params["wg"], params["wu"], params["wd"])
+        return jnp.mean((out - target) ** 2)
+
+    def loss_dense(params, x, gate):
+        out = _moe_naive_2d(x, gate, idx,
+                            params["wg"], params["wu"], params["wd"])
+        return jnp.mean((out - target) ** 2)
+
+    def step(loss_fn):
+        def train_step(params, x, gate):
+            loss, g = jax.value_and_grad(loss_fn)(params, x, gate)
+            new = jax.tree.map(lambda p, gi: p - LR * gi, params, g)
+            return loss, new
+        return train_step
+
+    fast = lilac.compile(step(loss_lilac))
+    base = jax.jit(step(loss_dense))
+    return fast, base, inner, loss_lilac, loss_dense
+
+
+def run(reps: int = 20, quick: bool = False, out: str | None = None) -> dict:
+    shape, params, x, gate, idx, target = _problem(quick)
+    fast, base, inner, loss_lilac, loss_dense = _make_steps(idx, target)
+
+    # gradient oracle check FIRST (before any update moves params)
+    _, g_fast = lilac.compile(jax.value_and_grad(loss_lilac))(params, x, gate)
+    _, g_ref = jax.jit(jax.value_and_grad(loss_dense))(params, x, gate)
+    rel = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))
+                           / (jnp.max(jnp.abs(b)) + 1e-12)),
+        g_fast, g_ref)
+    max_rel = max(jax.tree.leaves(rel))
+
+    # resolve + bake, then steady-state timing
+    fast(params, x, gate)
+    fast(params, x, gate)
+    info = fast.plan_info()
+    t_lilac = timeit(lambda *a: fast(*a)[0], params, x, gate, reps=reps)
+    t_dense = timeit(lambda *a: base(*a)[0], params, x, gate, reps=reps)
+
+    # a few real optimization steps: loss must go down on both paths
+    p_f, p_d = params, params
+    hist_f, hist_d = [], []
+    for _ in range(5):
+        lf, p_f = fast(p_f, x, gate)
+        ld, p_d = base(p_d, x, gate)
+        hist_f.append(float(lf))
+        hist_d.append(float(ld))
+
+    report = {
+        "benchmark": "train_e2e",
+        "quick": quick,
+        "reps": reps,
+        "platform": jax.default_backend(),
+        "host": _platform.machine(),
+        "shape": shape,
+        "t_lilac_step_s": t_lilac,
+        "t_dense_step_s": t_dense,
+        "speedup": t_dense / t_lilac,
+        "lilac_faster_than_dense": t_dense / t_lilac > 1.0,
+        "grad_max_rel_err": max_rel,
+        "grad_rtol": GRAD_RTOL,
+        "grads_match_dense_oracle": max_rel < GRAD_RTOL,
+        "inner_selected": [n for _, n in inner.last_selections],
+        "baked": info["baked"] >= 1 and not info["bake_errors"],
+        "bake_errors": info["bake_errors"],
+        "loss_lilac": hist_f,
+        "loss_dense": hist_d,
+        "loss_decreases": hist_f[-1] < hist_f[0] and hist_d[-1] < hist_d[0],
+    }
+    emit("train_e2e.step", t_lilac,
+         f"dense={t_dense * 1e3:.2f}ms lilac={t_lilac * 1e3:.2f}ms "
+         f"speedup={report['speedup']:.2f}x grad_err={max_rel:.2e} "
+         f"baked={report['baked']}")
+    if out:
+        write_json_report(out, report)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke shape (T=256)")
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_train_e2e.json",
+                    help="JSON report path ('' to skip)")
+    args = ap.parse_args(argv)
+    reps = args.reps if args.reps is not None else (10 if args.quick else 30)
+    run(reps=reps, quick=args.quick, out=args.out or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Train a sparse-MoE block through ``lilac.compile(jax.value_and_grad(...))``.
+
+The transform-composition story (docs/transforms.md) end to end: a naive
+one-hot MoE written in plain JAX, a loss, and a plain SGD train step.  The
+whole ``value_and_grad`` goes through one ``lilac.compile`` call:
+
+* the MoE forward in the loss is detected and replaced by the
+  capacity-bucket harness (E·C work instead of E·T);
+* the *gradient jaxpr* flows through the same pass, so the backward is
+  sparse too — the rewrite composes with ``jax.grad`` instead of being
+  silently dropped by it;
+* once selections resolve, the entire train step bakes into one jitted
+  executable plan — steady-state dispatch is a guard check + one call.
+
+Run:  PYTHONPATH=src python examples/train_sparse_moe.py [--steps 20]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import lilac
+from repro.models.layers import _moe_naive_2d
+
+T, D, F, E, K = 512, 32, 64, 8, 1
+LR = 1e-2
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=20)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(0)
+    params = {
+        "wg": jnp.asarray(rng.standard_normal((E, D, F)).astype(np.float32) * .1),
+        "wu": jnp.asarray(rng.standard_normal((E, D, F)).astype(np.float32) * .1),
+        "wd": jnp.asarray(rng.standard_normal((E, F, D)).astype(np.float32) * .1),
+    }
+    x = jnp.asarray(rng.standard_normal((T, D)).astype(np.float32))
+    gate = jnp.asarray(rng.random((T, K)).astype(np.float32))
+    # balanced routing: every expert sees T*K/E tokens, so capacity
+    # buckets never drop and gradients equal the dense oracle's
+    idx = jnp.asarray((np.arange(T * K).reshape(T, K) % E).astype(np.int32))
+    target = jnp.asarray(rng.standard_normal((T, D)).astype(np.float32))
+
+    def loss_fn(params, x, gate):
+        out = _moe_naive_2d(x, gate, idx,
+                            params["wg"], params["wu"], params["wd"])
+        return jnp.mean((out - target) ** 2)
+
+    def train_step(params, x, gate):
+        loss, g = jax.value_and_grad(loss_fn)(params, x, gate)
+        return loss, jax.tree.map(lambda p, gi: p - LR * gi, params, g)
+
+    fast = lilac.compile(train_step)
+
+    # gradient oracle: the rewritten step's grads vs plain jax.grad
+    _, p_fast = fast(params, x, gate)
+    _, p_ref = jax.jit(train_step)(params, x, gate)
+    err = max(float(jnp.max(jnp.abs(a - b)))
+              for a, b in zip(jax.tree.leaves(p_fast), jax.tree.leaves(p_ref)))
+    print("detection:", fast.last_report.summary())
+    print(f"max |params_lilac - params_dense| after one step: {err:.2e}")
+
+    # train: loss must go down; steady state serves the baked plan
+    p = params
+    t0 = time.perf_counter()
+    for step in range(args.steps):
+        loss, p = fast(p, x, gate)
+        if step % max(1, args.steps // 5) == 0 or step == args.steps - 1:
+            print(f"step {step:3d}  loss {float(loss):.5f}")
+    dt = (time.perf_counter() - t0) / args.steps
+    info = fast.plan_info()
+    print(f"{args.steps} steps at {dt * 1e3:.2f} ms/step; "
+          f"baked={info['baked']} plan_hits={info['plan_hits']} "
+          f"bake_errors={info['bake_errors']}")
+
+
+if __name__ == "__main__":
+    main()

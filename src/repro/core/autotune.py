@@ -60,19 +60,14 @@ Environment knobs:
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
-import tempfile
 import time
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-try:  # POSIX advisory locking for concurrent tuners; harmless to lose.
-    import fcntl
-except ImportError:  # pragma: no cover - non-POSIX
-    fcntl = None
+from repro.core.jsonstore import JsonStore
 
 SCHEMA_VERSION = 3
 _ENV_PATH = "LILAC_AUTOTUNE_CACHE"
@@ -217,8 +212,10 @@ class TuneStats:
             setattr(self, f.name, 0)
 
 
-class AutotuneCache:
-    """Versioned JSON store of tuning decisions.
+class AutotuneCache(JsonStore):
+    """Versioned JSON store of tuning decisions (the
+    :class:`repro.core.jsonstore.JsonStore` disk protocol with nested
+    per-``(signature, mode)`` entries and schema-1/2 migration).
 
     Layout (schema 3)::
 
@@ -254,15 +251,41 @@ class AutotuneCache:
     corrupt the file and rarely lose each other's entries.
     """
 
+    schema_version = SCHEMA_VERSION
+    readable_schemas = (1, 2)
+
     def __init__(self, path: Optional[os.PathLike] = None,
                  registry_fingerprint: str = ""):
-        self.path = Path(path) if path is not None else default_cache_path()
-        self.registry_fingerprint = registry_fingerprint
-        self.entries: Dict[str, Dict[str, Any]] = {}
-        self.stats = TuneStats()
-        self.loaded = False
+        self.stats = TuneStats()   # before super(): _note_* hooks need it
+        super().__init__(path, registry_fingerprint)
 
-    # -- disk ----------------------------------------------------------------
+    # -- disk (JsonStore hooks) ----------------------------------------------
+
+    def default_path(self) -> Path:
+        return default_cache_path()
+
+    def _note_invalidation(self):
+        self.stats.invalidations += 1
+
+    def _note_save_error(self):
+        self.stats.save_errors += 1
+
+    def _migrate(self, entries, schema):
+        if schema == 1:
+            entries = self._migrate_v1(entries)
+        return self._migrate_v2(entries)
+
+    def _merge(self, base, incoming, overwrite):
+        """Entries nest per signature then mode: merge at the mode level so
+        concurrent tuners working different modes of one signature don't
+        clobber each other."""
+        for sig, modes in incoming.items():
+            if not isinstance(modes, dict):
+                continue
+            slot = base.setdefault(sig, {})
+            for m, rec in modes.items():
+                if overwrite or m not in slot:
+                    slot[m] = rec
 
     def _migrate_v1(self, entries: Dict[str, Dict[str, Any]]
                     ) -> Dict[str, Dict[str, Any]]:
@@ -308,77 +331,6 @@ class AutotuneCache:
                     rec["schedule_swept"] = False
                     self.stats.migrations += 1
         return entries
-
-    def _read_disk(self) -> Dict[str, Dict[str, Any]]:
-        try:
-            with open(self.path, "r", encoding="utf-8") as f:
-                doc = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return {}
-        schema = doc.get("schema") if isinstance(doc, dict) else None
-        if not isinstance(doc, dict) or schema not in (1, 2, SCHEMA_VERSION):
-            self.stats.invalidations += 1
-            return {}
-        if doc.get("registry") != self.registry_fingerprint:
-            self.stats.invalidations += 1
-            return {}
-        entries = doc.get("entries", {})
-        if not isinstance(entries, dict):
-            return {}
-        if schema == 1:
-            entries = self._migrate_v1(entries)
-        if schema in (1, 2):
-            entries = self._migrate_v2(entries)
-        return entries
-
-    def load(self) -> "AutotuneCache":
-        """Warm-start: merge on-disk entries under the in-memory ones."""
-        disk = self._read_disk()
-        for sig, modes in disk.items():
-            self.entries.setdefault(sig, {}).update(
-                {m: r for m, r in modes.items() if m not in self.entries.get(sig, {})})
-        self.loaded = True
-        return self
-
-    def save(self):
-        """Best-effort persistence: an unwritable cache location degrades to
-        in-memory tuning (counted in ``stats``) instead of failing the
-        computation the tuner is serving."""
-        try:
-            self._save()
-        except OSError:
-            self.stats.save_errors += 1
-
-    def _save(self):
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        lock_path = self.path.with_suffix(self.path.suffix + ".lock")
-        lock_f = None
-        try:
-            if fcntl is not None:
-                lock_f = open(lock_path, "a+")
-                fcntl.flock(lock_f.fileno(), fcntl.LOCK_EX)
-            merged = self._read_disk()
-            for sig, modes in self.entries.items():
-                merged.setdefault(sig, {}).update(modes)
-            doc = {"schema": SCHEMA_VERSION,
-                   "registry": self.registry_fingerprint,
-                   "entries": merged}
-            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
-                                       prefix=self.path.name, suffix=".tmp")
-            try:
-                with os.fdopen(fd, "w", encoding="utf-8") as f:
-                    json.dump(doc, f, indent=1, sort_keys=True)
-                os.replace(tmp, self.path)
-            except BaseException:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-                raise
-        finally:
-            if lock_f is not None:
-                fcntl.flock(lock_f.fileno(), fcntl.LOCK_UN)
-                lock_f.close()
 
     # -- lookup --------------------------------------------------------------
 

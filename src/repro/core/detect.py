@@ -295,7 +295,14 @@ class Ctx:
                 vals.append(self.constvar_vals[lf])
             else:
                 raise KeyError(f"no value for leaf {lf}")
-        (out,) = jcore.eval_jaxpr(sub, [], *vals)
+        # Force concrete evaluation even when detection runs under an
+        # ambient trace (jax.grad / make_jaxpr of a caller that invokes a
+        # LilacFunction): all leaf values here are numpy trial inputs or
+        # concrete constvars, so the binds must not be swept into the
+        # outer trace — a Tracer result would fail np.asarray and make
+        # semantic validation spuriously reject.
+        with jax.ensure_compile_time_eval():
+            (out,) = jcore.eval_jaxpr(sub, [], *vals)
         return np.asarray(out)
 
 
@@ -475,6 +482,10 @@ class Match:
     # rewriter — either way the intermediate arrays never materialize in
     # host mode.
     epilogue: Optional[str] = None
+    # For variant='scan_body': (normalized body ClosedJaxpr, inner matches).
+    # The body was detected ONCE; the rewriter reconstructs the scan around
+    # a rewritten body, so the selected kernels are reused every iteration.
+    body: Optional[Tuple[Any, List["Match"]]] = None
 
     def __repr__(self):
         names = {k: (v if isinstance(v, int) else str(v))
@@ -1196,8 +1207,9 @@ _DEFAULT_PRIORITY = ["moe_ffn", "spmm_csr", "spmv_csr", "spmv_jds",
 
 class Detector:
     def __init__(self, computations: Optional[Sequence[W.Computation]] = None,
-                 fuse_epilogues: bool = True):
+                 fuse_epilogues: bool = True, scan_bodies: bool = True):
         self.fuse_epilogues = fuse_epilogues
+        self.scan_bodies = scan_bodies
         if computations is not None:
             comps = list(computations)
             lenient = False
@@ -1238,11 +1250,44 @@ class Detector:
                     claimed.add(id(eqn))
                     for ce in found.claimed_eqns:
                         claimed.add(id(ce))
+        if self.scan_bodies:
+            matches += self._detect_scan_bodies(cj, claimed)
         if self.fuse_epilogues:
             matches = [extend_epilogue(ctx, m) for m in matches]
         matches.sort(key=lambda mm: ctx.eqn_index.get(id(mm.anchor_eqn), 0))
         return DetectionReport(matches=matches, n_eqns=len(cj.jaxpr.eqns),
                                log=ctx.log)
+
+    def _detect_scan_bodies(self, cj, claimed: set) -> List[Match]:
+        """Descend into unclaimed ``scan`` equations (training loops,
+        microbatch accumulation) and detect inside the body jaxpr — once.
+        The whole scan becomes one ``variant='scan_body'`` match carrying
+        the normalized body and its inner matches; the rewriter rebuilds
+        the scan around a rewritten body, so the kernels selected here are
+        reused on every iteration instead of being re-detected."""
+        out: List[Match] = []
+        for eqn in cj.jaxpr.eqns:
+            if eqn.primitive.name != "scan" or id(eqn) in claimed:
+                continue
+            try:
+                body_closed = eqn.params["jaxpr"]
+                norm = normalize_closed_jaxpr(body_closed)
+            except Exception:
+                continue
+            sub = self.detect(norm, normalize=False)
+            if not sub.matches:
+                continue
+            # the scan's operands must stay live through the rewrite: bind
+            # them so needed_eqn_ids keeps their producers
+            binding = {f"scan_in{i}": v for i, v in enumerate(eqn.invars)
+                       if not isinstance(v, jex_core.Literal)}
+            out.append(Match(
+                computation="scan_body", variant="scan_body", format="SCAN",
+                anchor=eqn.outvars[0], anchor_eqn=eqn, binding=binding,
+                notes=f"{len(sub.matches)} match(es) in scan body",
+                body=(norm, sub.matches)))
+            claimed.add(id(eqn))
+        return out
 
     def detect_fn(self, fn: Callable, *example_args, **kw) -> DetectionReport:
         cj = jax.make_jaxpr(fn)(*example_args, **kw)

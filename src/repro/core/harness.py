@@ -94,6 +94,13 @@ class Harness:
     # binding['bias']) itself — in-register for Pallas kernels; False
     # harnesses get the epilogue applied by the rewriter after the call.
     fuse_epilogue: bool = False
+    # Declared custom backward (what_lang.VjpClause): the rewriter wraps
+    # the call in jax.custom_vjp over the clause's wrt keys, using the
+    # registered backward body (spec.VJPS).  None means jax differentiates
+    # straight through the body — fine for pure-jnp harnesses, fatal for
+    # Pallas/host kernels, which is why those declare one.  NOT in the
+    # fingerprint: adding a backward must not invalidate persisted tunings.
+    vjp: Optional[Any] = None
     # Opt-out for executable-plan baking (repro.core.plan): set False for
     # a backend whose body has per-call HOST-side behavior beyond its
     # declared marshal clauses (RNG, mutable globals, external I/O) — a
@@ -426,6 +433,71 @@ def _moe_capacity(b: Binding, ctx: CallCtx, capacity_factor: float = 2.0):
         y[jnp.where(keep, slot, E * C)] * flat_g[:, None],
         flat_t, num_segments=T)
     return out.astype(x.dtype)
+
+
+def _spmv_csr_bwd(b: Binding, ctx: CallCtx, primal, ct):
+    """SpMV transpose-products for CSR/COO bindings: ``d_a`` is the
+    per-nonzero product, ``d_iv`` the A^T @ ct scatter (the grad jaxpr's
+    SpMVᵀ — itself a COO SpMV, re-detectable by an outer compiled grad).
+    O(nnz) in both, never densifying A."""
+    r = _row_ids(b)
+    return {
+        "a": ct[r] * b["iv"][b["colidx"]],
+        "iv": jnp.zeros_like(b["iv"]).at[b["colidx"]].add(b["a"] * ct[r]),
+    }
+
+
+def _spmv_ell_bwd(b: Binding, ctx: CallCtx, primal, ct):
+    """ELL/JDS direct-match backward: padded (val==0) slots receive the
+    cotangent product like any other slot — that IS the gradient of the
+    forward wrt the padded val array, matching the dense-jaxpr oracle."""
+    perm = b.get("perm")
+    dacc = ct if perm is None else ct[perm]
+    return {
+        "val": dacc[:, None] * b["vector"][b["col_ind"]],
+        "vector": jnp.zeros_like(b["vector"]).at[b["col_ind"]].add(
+            b["val"] * dacc[:, None]),
+    }
+
+
+def _spmm_csr_bwd(b: Binding, ctx: CallCtx, primal, ct):
+    """BSR/CSR SpMM backward: ``d_dense = Aᵀ @ ct`` as an O(nnz·N)
+    scatter, ``d_a`` the per-nonzero row-dot."""
+    r = _row_ids(b)
+    return {
+        "a": jnp.sum(ct[r] * b["dense"][b["colidx"]], axis=-1),
+        "dense": jnp.zeros_like(b["dense"]).at[b["colidx"]].add(
+            b["a"][:, None] * ct[r]),
+    }
+
+
+def _moe_ffn_bwd(b: Binding, ctx: CallCtx, primal, ct):
+    """MoE scatter-grad via capacity-bucket recomputation: the backward
+    re-runs the E·C-token sorted dispatch (not the E·T dense form) and
+    pulls the cotangent through it, so grads cost the same compute
+    reduction as the sparse forward.  Exact whenever no token exceeds
+    capacity (e.g. balanced routing); dropped tokens get zero grad, the
+    standard capacity-truncation semantics."""
+    def f(x, gate, wg, wu, wd):
+        bb = dict(b)
+        bb.update(x=x, gate=gate, wg=wg, wu=wu, wd=wd)
+        return _moe_capacity(bb, ctx)
+
+    _, pull = jax.vjp(f, b["x"], b["gate"], b["wg"], b["wu"], b["wd"])
+    gx, gg, gwg, gwu, gwd = pull(ct)
+    return {"x": gx, "gate": gg, "wg": gwg, "wu": gwu, "wd": gwd}
+
+
+#: Builtin backward bodies for ``vjp`` clauses, keyed by the name the
+#: clause cites.  ``repro.core.spec`` enters these into its VJPS registry
+#: at import, so they are declarable from any HARNESS block (builtin spec
+#: texts and the kernel packages alike).
+BUILTIN_VJPS: Dict[str, Callable] = {
+    "spmv_csr_bwd": _spmv_csr_bwd,
+    "spmv_ell_bwd": _spmv_ell_bwd,
+    "spmm_csr_bwd": _spmm_csr_bwd,
+    "moe_ffn_bwd": _moe_ffn_bwd,
+}
 
 
 def _moe_dense(b: Binding, ctx: CallCtx):

@@ -1,0 +1,157 @@
+"""repro.core.jsonstore — the shared on-disk JSON store protocol.
+
+Both of LiLAC's persistent caches — tuning decisions
+(:class:`repro.core.autotune.AutotuneCache`) and resolved plans
+(:class:`repro.core.plan.PlanCache`) — follow one disk protocol, factored
+here so the concurrency and invalidation story exists exactly once:
+
+* **Document layout**: a single JSON object
+  ``{"schema": <int>, "registry": "<fingerprint>", "entries": {...}}``.
+  The schema version gates structural compatibility; the registry
+  fingerprint ties every record to the harness set that produced it — a
+  mismatch on either drops the whole file (records are only as durable as
+  the specs behind them).
+* **Migration**: subclasses may declare older ``readable_schemas`` and a
+  ``_migrate`` hook; an old-but-readable file is upgraded in memory on
+  load instead of being discarded (the autotune cache migrates schema-1/2
+  records into re-measurable priors this way).
+* **Atomic merge-on-save**: ``save`` re-reads the file under an advisory
+  ``flock``, merges the in-memory entries over it, and atomically
+  replaces the file (tempfile in the same directory + ``os.replace``).
+  Concurrent processes never corrupt the store and rarely lose each
+  other's entries.  Losing the lock (non-POSIX platforms) degrades to
+  last-writer-wins, never to corruption.
+* **Best-effort persistence**: an unwritable cache location degrades to
+  an in-memory store — a failed save is counted, not raised, because the
+  cache always serves a computation that must not fail on cache trouble.
+
+Subclass surface: set ``schema_version`` (and optionally
+``readable_schemas``), implement ``default_path``; override ``_migrate``
+for old-schema upgrades, ``_merge`` when entries nest (the autotune
+cache merges per ``(signature, mode)``, not per top-level key), and the
+``_note_*`` hooks to feed the subclass's stats counters.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+try:  # POSIX advisory locking for concurrent writers; harmless to lose.
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX
+    fcntl = None
+
+
+class JsonStore:
+    """Versioned, registry-fingerprinted JSON entry store (see module
+    docstring for the protocol)."""
+
+    #: schema written by ``save`` and required (or migratable) on read
+    schema_version: int = 1
+    #: older schemas ``_read_disk`` accepts and feeds through ``_migrate``
+    readable_schemas: Tuple[int, ...] = ()
+
+    def __init__(self, path: Optional[os.PathLike] = None,
+                 registry_fingerprint: str = ""):
+        self.path = Path(path) if path is not None else self.default_path()
+        self.registry_fingerprint = registry_fingerprint
+        self.entries: Dict[str, Any] = {}
+        self.loaded = False
+
+    # -- subclass surface ----------------------------------------------------
+
+    def default_path(self) -> Path:
+        raise NotImplementedError
+
+    def _migrate(self, entries: Dict[str, Any], schema: int
+                 ) -> Dict[str, Any]:
+        """Upgrade entries read from an older (readable) schema."""
+        return entries
+
+    def _merge(self, base: Dict[str, Any], incoming: Dict[str, Any],
+               overwrite: bool):
+        """Merge ``incoming`` entries into ``base`` in place.  The default
+        is flat per-key; subclasses with nested entries override.  With
+        ``overwrite=False`` existing keys win (warm-start: disk under
+        memory); with ``overwrite=True`` incoming wins (save: memory over
+        disk)."""
+        for k, v in incoming.items():
+            if overwrite or k not in base:
+                base[k] = v
+
+    def _note_invalidation(self):
+        """A whole-file drop: schema or registry-fingerprint mismatch."""
+
+    def _note_save_error(self):
+        """Persistence failed (unwritable path); store stays in-memory."""
+
+    # -- disk protocol -------------------------------------------------------
+
+    def _read_disk(self) -> Dict[str, Any]:
+        try:
+            with open(self.path, "r", encoding="utf-8") as f:
+                doc = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return {}
+        schema = doc.get("schema") if isinstance(doc, dict) else None
+        if not isinstance(doc, dict) \
+                or schema not in (self.schema_version, *self.readable_schemas):
+            self._note_invalidation()
+            return {}
+        if doc.get("registry") != self.registry_fingerprint:
+            self._note_invalidation()
+            return {}
+        entries = doc.get("entries", {})
+        if not isinstance(entries, dict):
+            return {}
+        if schema != self.schema_version:
+            entries = self._migrate(entries, schema)
+        return entries
+
+    def load(self) -> "JsonStore":
+        """Warm-start: merge on-disk entries under the in-memory ones."""
+        self._merge(self.entries, self._read_disk(), overwrite=False)
+        self.loaded = True
+        return self
+
+    def save(self):
+        """Best-effort persistence: an unwritable cache location degrades
+        to an in-memory store (counted via ``_note_save_error``) instead
+        of failing the computation the cache is serving."""
+        try:
+            self._save()
+        except OSError:
+            self._note_save_error()
+
+    def _save(self):
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        lock_path = self.path.with_suffix(self.path.suffix + ".lock")
+        lock_f = None
+        try:
+            if fcntl is not None:
+                lock_f = open(lock_path, "a+")
+                fcntl.flock(lock_f.fileno(), fcntl.LOCK_EX)
+            merged = self._read_disk()
+            self._merge(merged, self.entries, overwrite=True)
+            doc = {"schema": self.schema_version,
+                   "registry": self.registry_fingerprint,
+                   "entries": merged}
+            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
+                                       prefix=self.path.name, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w", encoding="utf-8") as f:
+                    json.dump(doc, f, indent=1, sort_keys=True)
+                os.replace(tmp, self.path)
+            except BaseException:
+                try:
+                    os.unlink(tmp)
+                except OSError:
+                    pass
+                raise
+        finally:
+            if lock_f is not None:
+                fcntl.flock(lock_f.fileno(), fcntl.LOCK_UN)
+                lock_f.close()

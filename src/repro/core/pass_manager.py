@@ -85,6 +85,21 @@ class CompiledEntry:
         return self._needed_empty
 
 
+def _flat_matches(matches) -> List[D.Match]:
+    """Flatten a detection report for selection bookkeeping: scan-body
+    wrapper matches never select a harness themselves — their *inner*
+    matches do, once per trace of the rebuilt ``lax.scan`` body — so pins,
+    resolution counting and the anchor->index map all operate on the
+    recursively flattened list."""
+    out: List[D.Match] = []
+    for m in matches:
+        if m.variant == "scan_body" and m.body is not None:
+            out.extend(_flat_matches(m.body[1]))
+        else:
+            out.append(m)
+    return out
+
+
 def _signature(flat_args) -> Tuple:
     """Hashable compile-dict key, derived from the single leaf-keying
     source (``plan.leaf_templates`` — also the basis of the last-entry
@@ -165,15 +180,16 @@ class LilacFunction:
         current tune space drops the pin (the autotune policy re-tunes it)
         rather than ever pinning something unservable."""
         pins: Dict[int, Tuple] = {}
+        flat = _flat_matches(matches)
         for k, v in (raw or {}).items():
             try:
                 i, name, schedule = int(k), v[0], v[1]
             except (TypeError, ValueError, IndexError):
                 continue
-            if not (0 <= i < len(matches)):
+            if not (0 <= i < len(flat)):
                 continue
             try:
-                h = self.registry.get(matches[i].computation, name)
+                h = self.registry.get(flat[i].computation, name)
             except KeyError:
                 continue
             if schedule is not None and schedule not in (h.schedules or ()):
@@ -228,7 +244,7 @@ class LilacFunction:
         entry = CompiledEntry(ncj, report, out_tree)
         entry.pins = pins
         entry.idx_of = {id(m.anchor_eqn): i
-                        for i, m in enumerate(report.matches)}
+                        for i, m in enumerate(_flat_matches(report.matches))}
         entry.cache_key = cache_key
         # a served record with complete pins never re-persists; a served
         # record whose pins were dropped (or never tuned) re-persists once
@@ -290,7 +306,11 @@ class LilacFunction:
         idx_of = entry.idx_of
 
         def select(m: D.Match, binding=None, ctx=None) -> H.Harness:
-            i = idx_of[id(m.anchor_eqn)]
+            i = idx_of.get(id(m.anchor_eqn))
+            if i is None:
+                # defensive: a match outside the entry's flattened report
+                # (shouldn't happen) still selects, just without pinning
+                return self._select(m, binding, ctx)
             pin = entry.pins.get(i)
             if pin is not None:
                 name, schedule = pin
@@ -349,9 +369,13 @@ class LilacFunction:
         matches = entry.report.matches if self.enabled else []
         select = (self._pinned_select(entry) if self.policy == "autotune"
                   else self._select)
-        concrete = not any(isinstance(x, jax.core.Tracer) for x in uflat)
+        # Recording runs even when leaves are tracers (the call sits under
+        # jax.grad / vmap / a user jit): once the rewrite is resolved, the
+        # plan bakes *under the transform trace* — no concrete call is ever
+        # required — with warm-up deferred and hoisting skipped for
+        # anything tracer-derived (see _maybe_bake / plan.bake_plan).
         recorder = (P.PlanRecorder()
-                    if self.bake_enabled and concrete and not entry.no_bake
+                    if self.bake_enabled and not entry.no_bake
                     else None)
 
         def ctx_factory(m):
@@ -390,7 +414,8 @@ class LilacFunction:
         pinned (or tuning is disabled, making defaults deterministic)."""
         if self.policy != "autotune" or not matches:
             return True
-        return len(entry.pins) == len(matches) or autotune_disabled()
+        return (len(entry.pins) == len(_flat_matches(matches))
+                or autotune_disabled())
 
     def _maybe_persist(self, entry: CompiledEntry):
         pc = self._plan_cache
@@ -398,6 +423,13 @@ class LilacFunction:
             return
         matches = entry.report.matches
         if not self._resolved(entry, matches):
+            return
+        if any(m.variant == "scan_body" for m in matches):
+            # a scan-body match carries the normalized body jaxpr + inner
+            # matches as live objects; there is no stable positional
+            # address for them, and a rehydrated wrapper without its body
+            # would be unservable — keep scan entries in-memory only
+            entry.persisted = True
             return
         try:
             ser = P.serialize_matches(entry.closed_jaxpr, matches)
@@ -429,8 +461,32 @@ class LilacFunction:
                     recorder: P.PlanRecorder, raw_flat, flat, in_tree):
         if entry.no_bake or not self._resolved(entry, matches):
             return
+        if any(m.variant == "scan_body" for m in matches):
+            # the rebuilt lax.scan already compiles the body once per call
+            # and reuses kernels across iterations; a baked plan on top
+            # could not guard body-internal marshal sources (their binding
+            # atoms live in the body jaxpr, not the outer one)
+            self._disable_bake(
+                entry, "scan-body rewrite: lax.scan reconstruction "
+                       "compiles per call; plan guards cannot cover "
+                       "body-internal marshal sources")
+            return
         if not recorder.complete_for(matches):
             return
+        traced = any(isinstance(x, jax.core.Tracer) for x in flat)
+        if traced:
+            if any(s.buffers for s in recorder.slots.values()):
+                # marshal products recorded under a transform trace are
+                # (or depend on) tracers — not hoistable.  Skip this call
+                # without disabling: a later concrete call records real
+                # buffers
+                return
+            gpos = P.marshal_guard_positions(
+                entry.closed_jaxpr,
+                [(m, recorder.slots[id(m.anchor_eqn)].harness)
+                 for m in matches])
+            if any(isinstance(flat[i], jax.core.Tracer) for i in gpos):
+                return                  # can't guard a tracer's contents
         # marshal_policy='off' promises "every call repacks" (the A/B
         # always-fresh baseline): hoisting a recorded repack into a plan
         # would silently reinstate caching, so any marshal-bearing

@@ -43,19 +43,14 @@ import dataclasses
 import hashlib
 import json
 import os
-import tempfile
 from pathlib import Path
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
+from repro.core.jsonstore import JsonStore
 from repro.core.marshal import TrackedArray, fingerprint, version_token
-
-try:  # POSIX advisory locking, as in autotune; harmless to lose.
-    import fcntl
-except ImportError:  # pragma: no cover - non-POSIX
-    fcntl = None
 
 SCHEMA_VERSION = 1
 _ENV_PATH = "LILAC_PLAN_CACHE"
@@ -294,8 +289,9 @@ class PlanCacheStats:
         return dataclasses.asdict(self)
 
 
-class PlanCache:
-    """Versioned JSON store of resolved plans, modeled on AutotuneCache.
+class PlanCache(JsonStore):
+    """Versioned JSON store of resolved plans — the flat-keyed
+    :class:`repro.core.jsonstore.JsonStore` disk protocol.
 
     Layout::
 
@@ -310,35 +306,21 @@ class PlanCache:
     that produced their pins).
     """
 
+    schema_version = SCHEMA_VERSION
+
     def __init__(self, path: Optional[os.PathLike] = None,
                  registry_fingerprint: str = ""):
-        self.path = Path(path) if path is not None else default_plan_cache_path()
-        self.registry_fingerprint = registry_fingerprint
-        self.entries: Dict[str, Dict[str, Any]] = {}
-        self.stats = PlanCacheStats()
-        self.loaded = False
+        self.stats = PlanCacheStats()   # before super(): _note_* hooks
+        super().__init__(path, registry_fingerprint)
 
-    def _read_disk(self) -> Dict[str, Dict[str, Any]]:
-        try:
-            with open(self.path, "r", encoding="utf-8") as f:
-                doc = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            return {}
-        if not isinstance(doc, dict) or doc.get("schema") != SCHEMA_VERSION:
-            self.stats.invalidations += 1
-            return {}
-        if doc.get("registry") != self.registry_fingerprint:
-            self.stats.invalidations += 1
-            return {}
-        entries = doc.get("entries", {})
-        return entries if isinstance(entries, dict) else {}
+    def default_path(self) -> Path:
+        return default_plan_cache_path()
 
-    def load(self) -> "PlanCache":
-        disk = self._read_disk()
-        for key, rec in disk.items():
-            self.entries.setdefault(key, rec)
-        self.loaded = True
-        return self
+    def _note_invalidation(self):
+        self.stats.invalidations += 1
+
+    def _note_save_error(self):
+        self.stats.save_errors += 1
 
     def get(self, key: str) -> Optional[Dict[str, Any]]:
         rec = self.entries.get(key)
@@ -359,44 +341,6 @@ class PlanCache:
         self.stats.stores += 1
         if persist:
             self.save()
-
-    def save(self):
-        """Best-effort persistence (an unwritable location degrades to
-        in-memory plans, counted in stats)."""
-        try:
-            self._save()
-        except OSError:
-            self.stats.save_errors += 1
-
-    def _save(self):
-        self.path.parent.mkdir(parents=True, exist_ok=True)
-        lock_path = self.path.with_suffix(self.path.suffix + ".lock")
-        lock_f = None
-        try:
-            if fcntl is not None:
-                lock_f = open(lock_path, "a+")
-                fcntl.flock(lock_f.fileno(), fcntl.LOCK_EX)
-            merged = self._read_disk()
-            merged.update(self.entries)
-            doc = {"schema": SCHEMA_VERSION,
-                   "registry": self.registry_fingerprint,
-                   "entries": merged}
-            fd, tmp = tempfile.mkstemp(dir=str(self.path.parent),
-                                       prefix=self.path.name, suffix=".tmp")
-            try:
-                with os.fdopen(fd, "w", encoding="utf-8") as f:
-                    json.dump(doc, f, indent=1, sort_keys=True)
-                os.replace(tmp, self.path)
-            except BaseException:
-                try:
-                    os.unlink(tmp)
-                except OSError:
-                    pass
-                raise
-        finally:
-            if lock_f is not None:
-                fcntl.flock(lock_f.fileno(), fcntl.LOCK_UN)
-                lock_f.close()
 
 
 # ---------------------------------------------------------------------------
@@ -648,7 +592,8 @@ class ExecutablePlan:
 
     def __init__(self, jitted, in_tree, out_tree, avals, guards,
                  report, selections, schedules, hoisted, enabled: bool,
-                 const_guards=(), registry_epoch: int = 0):
+                 const_guards=(), registry_epoch: int = 0,
+                 trace_servable: bool = False):
         # registry epoch at bake time: the pass manager refuses to serve
         # (or guard-refresh) this plan once any harness (re-)registration
         # has moved the registry on — a replaced kernel body must never
@@ -667,6 +612,13 @@ class ExecutablePlan:
         self.schedules = schedules           # aligned schedule variants
         self.hoisted = hoisted               # {anchor id: (buffers...)}
         self.enabled = enabled
+        # True when every selected harness composes with transform traces
+        # (jit_safe, or wrapped in a declared custom_vjp): the plan may
+        # then serve abstract (tracer) leaves, EXCEPT at marshal-guarded
+        # positions — hoisted buffers were derived from those leaves'
+        # *contents*, which a tracer cannot attest to
+        self.trace_servable = bool(trace_servable)
+        self._guarded_pos = frozenset(g.pos for g in guards)
         self.hits = 0
 
     def match_and_unwrap(self, in_tree, leaves, enabled: bool):
@@ -685,7 +637,8 @@ class ExecutablePlan:
                 x = x.arr
                 out[i] = x
             if spec[0] == "a":
-                if isinstance(x, jax.core.Tracer):
+                if isinstance(x, jax.core.Tracer) and (
+                        not self.trace_servable or i in self._guarded_pos):
                     return None
                 if (getattr(x, "shape", None) != spec[1]
                         or getattr(x, "dtype", None) != spec[2]):
@@ -783,14 +736,28 @@ def bake_plan(*, closed_jaxpr, matches, needed, recorder: PlanRecorder,
                              ctx_factory, needed=needed)
 
     jitted = jax.jit(baked, donate_argnums=donate)
-    # Warm-up compile now, so the first fast-path call is already fast —
-    # and so an untraceable body fails HERE (the caller falls back to the
-    # interpreter) rather than on a later dispatch.  Donated positions get
-    # copies: the caller's buffers must survive the warm-up.
-    warm = list(flat)
-    for i in donate:
-        warm[i] = jnp.array(warm[i])
-    jax.block_until_ready(jitted(*warm))
+    traced = any(isinstance(x, jax.core.Tracer) for x in flat)
+    if traced:
+        # Baking under a transform trace (the call that resolved the
+        # rewrite ran inside jax.grad/vmap/jit): there are no concrete
+        # leaves to warm up with, and a guard anchored on a tracer would
+        # be meaningless.  The caller guaranteed no marshal-source
+        # position holds a tracer, so guard construction below only ever
+        # sees concrete leaves; warm-up is deferred to first dispatch.
+        for pos in guard_positions:
+            if isinstance(raw_flat[pos], jax.core.Tracer):
+                raise PlanBakeError(
+                    "marshal-source leaf is a tracer; cannot guard")
+    else:
+        # Warm-up compile now, so the first fast-path call is already
+        # fast — and so an untraceable body fails HERE (the caller falls
+        # back to the interpreter) rather than on a later dispatch.
+        # Donated positions get copies: the caller's buffers must survive
+        # the warm-up.
+        warm = list(flat)
+        for i in donate:
+            warm[i] = jnp.array(warm[i])
+        jax.block_until_ready(jitted(*warm))
 
     guards = [_Guard(pos, raw_flat[pos]) for pos in sorted(guard_positions)]
     # Closure captures: jax keeps them as live references in consts, so
@@ -816,7 +783,11 @@ def bake_plan(*, closed_jaxpr, matches, needed, recorder: PlanRecorder,
     selections = [(m, slots[id(m.anchor_eqn)].harness.name) for m in matches]
     schedules = [slots[id(m.anchor_eqn)].schedule for m in matches]
     hoisted = {aid: tuple(s.buffers) for aid, s in slots.items()}
+    trace_servable = all(
+        s.harness.jit_safe or getattr(s.harness, "vjp", None) is not None
+        for s in slots.values())
     return ExecutablePlan(jitted, in_tree, out_tree, _aval_specs(raw_flat),
                           guards, report, selections, schedules, hoisted,
                           enabled, const_guards=const_guards,
-                          registry_epoch=registry_epoch)
+                          registry_epoch=registry_epoch,
+                          trace_servable=trace_servable)

@@ -12,10 +12,12 @@ outputs feed only matched anchors).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import core as jcore
 from jax.extend import core as jex_core
 
 from repro.core.detect import Match
@@ -96,7 +98,12 @@ def run_rewritten(closed_jaxpr,
     for eqn in jaxpr.eqns:
         m = anchor_map.get(id(eqn))
         if m is not None:
-            _eval_anchor(eqn, m, select, read, write, ctx_factory, on_select)
+            if m.variant == "scan_body":
+                _eval_scan_body(eqn, m, select, read, write, ctx_factory,
+                                on_select)
+            else:
+                _eval_anchor(eqn, m, select, read, write, ctx_factory,
+                             on_select)
             continue
         if id(eqn) not in needed:
             continue
@@ -125,6 +132,51 @@ def apply_epilogue(out, bias, epilogue: str):
     return out
 
 
+def _call_with_vjp(harness: Harness, binding_vals: Dict[str, Any],
+                   ctx: CallCtx):
+    """Wrap the harness call in ``jax.custom_vjp`` per its declared vjp
+    clause: the forward becomes opaque to AD (host marshaling and Pallas
+    bodies are never differentiated through) and the registered backward
+    body supplies sparse-aware gradients for the wrt binding keys.  Keys
+    not listed — index structure, routing tables, shape ints — are closed
+    over as non-differentiable constants."""
+    from repro.core.spec import VJPS
+    clause = harness.vjp
+    bwd_body = VJPS[clause.name]
+    # Only values that are live tracers become custom_vjp formal args:
+    # a concrete operand (say, a constant sparse matrix) stays a closure
+    # capture, so marshal clauses can still fingerprint and repack it —
+    # custom_vjp abstracts ALL formal args inside its fwd trace, which
+    # would otherwise break host marshaling for operands that were never
+    # differentiated in the first place.
+    wrt = tuple(k for k in clause.wrt if k in binding_vals
+                and isinstance(binding_vals[k], jcore.Tracer))
+    nondiff = {k: v for k, v in binding_vals.items() if k not in wrt}
+
+    def base(*dv):
+        b = dict(nondiff)
+        b.update(zip(wrt, dv))
+        return harness(b, ctx)
+
+    def fwd(*dv):
+        return base(*dv), dv
+
+    def bwd(res, ct):
+        b = dict(nondiff)
+        b.update(zip(wrt, res))
+        grads = bwd_body(b, ctx, None, ct)
+        missing = [k for k in wrt if k not in grads]
+        if missing:
+            raise ValueError(
+                f"vjp {clause.name!r} returned no gradient for "
+                f"{missing} (declared wrt: {list(clause.wrt)})")
+        return tuple(grads[k] for k in wrt)
+
+    run = jax.custom_vjp(base)
+    run.defvjp(fwd, bwd)
+    return run(*(binding_vals[k] for k in wrt))
+
+
 def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory,
                  on_select=None):
     binding_vals = {
@@ -135,10 +187,23 @@ def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory,
     harness = select(m, binding_vals, ctx)
     if on_select is not None:
         on_select(m, harness, ctx)
-    out = harness(binding_vals, ctx)
-    if m.epilogue is not None and not getattr(harness, "fuse_epilogue",
-                                              False):
-        out = apply_epilogue(out, binding_vals.get("bias"), m.epilogue)
+    clause = getattr(harness, "vjp", None)
+    wrap = clause is not None and any(
+        isinstance(binding_vals.get(k), jcore.Tracer) for k in clause.wrt)
+    if wrap:
+        # Unfuse any detected epilogue under differentiation: the declared
+        # backward covers the core computation only, so the epilogue is
+        # applied outside the opaque call where jax can transpose it.
+        inner_ctx = (dataclasses.replace(ctx, epilogue=None)
+                     if ctx.epilogue is not None else ctx)
+        out = _call_with_vjp(harness, binding_vals, inner_ctx)
+        if m.epilogue is not None:
+            out = apply_epilogue(out, binding_vals.get("bias"), m.epilogue)
+    else:
+        out = harness(binding_vals, ctx)
+        if m.epilogue is not None and not getattr(harness, "fuse_epilogue",
+                                                  False):
+            out = apply_epilogue(out, binding_vals.get("bias"), m.epilogue)
     if m.variant == "loop":
         # scan anchor: outvars = (final counter, final accumulator)
         counter_init = None
@@ -155,6 +220,37 @@ def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory,
             raise NotImplementedError("unexpected extra scan outputs")
     else:
         write(eqn.outvars[0], _coerce(out, eqn.outvars[0].aval))
+
+
+def _eval_scan_body(eqn, m: Match, select, read, write, ctx_factory,
+                    on_select=None):
+    """Rebuild a ``lax.scan`` around a rewritten body (variant='scan_body'
+    matches): the body was detected once; tracing it here selects kernels
+    once, and the compiled loop reuses them on every iteration.  Operands
+    closed over as scan consts stay concrete inside the body trace, so
+    host-marshaling harnesses still work for loop-invariant sparse data."""
+    params = eqn.params
+    nconsts = params["num_consts"]
+    ncarry = params["num_carry"]
+    invals = [read(x) for x in eqn.invars]
+    consts = invals[:nconsts]
+    init = invals[nconsts:nconsts + ncarry]
+    xs = invals[nconsts + ncarry:]
+    body_cj, body_matches = m.body
+    needed = needed_eqn_ids(body_cj, body_matches)
+
+    def body_fn(carry, x):
+        flat = list(consts) + list(carry) + list(x)
+        outs = run_rewritten(body_cj, body_matches, select, flat,
+                             ctx_factory, on_select, needed)
+        return tuple(outs[:ncarry]), tuple(outs[ncarry:])
+
+    carry_out, ys = jax.lax.scan(
+        body_fn, tuple(init), tuple(xs),
+        length=params["length"], reverse=params["reverse"],
+        unroll=params.get("unroll", 1))
+    for ov, v in zip(eqn.outvars, list(carry_out) + list(ys)):
+        write(ov, _coerce(v, ov.aval))
 
 
 def _coerce(val, aval):

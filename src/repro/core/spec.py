@@ -49,6 +49,7 @@ class SpecError(ValueError):
 
 REPACKS: Dict[str, Callable[[H.Binding], Any]] = {}
 HOOKS: Dict[str, Callable[[Dict[str, Any]], Any]] = {}
+VJPS: Dict[str, Callable] = {}
 
 
 def repack(name: str, *, override: bool = False):
@@ -71,6 +72,30 @@ def hook(name: str, *, override: bool = False):
         HOOKS[name] = fn
         return fn
     return deco
+
+
+def vjp(name: str, *, override: bool = False):
+    """Register a custom backward body so ``vjp <name>(wrt...)`` clauses can
+    refer to it.  The body has signature::
+
+        bwd(binding, ctx, primal_out, cotangent) -> {wrt_key: grad, ...}
+
+    It runs under the backward trace, so it must be traceable in
+    ``cotangent`` (and the wrt binding values) — pure jnp over whatever
+    concrete index structure it pulls from the binding / marshaling cache.
+    The returned dict must supply a gradient for every declared wrt key."""
+    def deco(fn):
+        if name in VJPS and VJPS[name] is not fn and not override:
+            raise SpecError(f"vjp {name!r} is already registered")
+        VJPS[name] = fn
+        return fn
+    return deco
+
+
+# Builtin backward bodies (repro.core.harness.BUILTIN_VJPS) enter the
+# registry at import so every HARNESS block — builtin spec text or kernel
+# package — can cite them without registration-order footwork.
+VJPS.update(H.BUILTIN_VJPS)
 
 
 # ---------------------------------------------------------------------------
@@ -196,7 +221,7 @@ def build_harnesses(decl: W.HarnessDecl, body: Callable, *,
                   persistent=persistent, setup=setup, teardown=teardown,
                   lifecycle=lifecycle, marshal=decl.marshal,
                   tune=decl.tune, constraints=decl.constraints,
-                  fuse_epilogue=decl.fuse_epilogue,
+                  fuse_epilogue=decl.fuse_epilogue, vjp=decl.vjp,
                   _schedules=schedules or None)
         for comp in decl.implements
     ]
@@ -243,6 +268,12 @@ def register_spec(spec: Union[str, W.Spec], bodies: Dict[str, Callable], *,
             raise SpecError(
                 f"no kernel body bound for HARNESS {decl.name!r} "
                 f"(bodies has {sorted(bodies)})")
+        if decl.vjp is not None and decl.vjp.name not in VJPS:
+            # eager, like repacks: a typo'd backward must fail at
+            # registration, not the first time someone differentiates
+            raise SpecError(
+                f"HARNESS {decl.name!r}: unknown vjp {decl.vjp.name!r} "
+                f"(register it with @vjp before the harness)")
         for cl in decl.marshal:
             # eager, like hooks: a typo'd repack must fail at registration,
             # not be silently disqualified by the autotuner at call time

@@ -22,6 +22,7 @@
               | tune <name> in { <valuelist> } ;
               | constraint <exp> ( <= | < ) <exp> ;
               | fuse epilogue ;
+              | vjp <name> ( <namelist> ) ;
     namelist ::= <name> { , <name> }
     keylist ::= <key> { , <key> }
     key     ::= <name> { | <name> }          -- alternatives, first present wins
@@ -330,6 +331,25 @@ def _eval_expr(e: Expr, env: Dict[str, Any]):
     raise TypeError(f"unsupported constraint expression {e!r}")
 
 
+@dataclasses.dataclass(frozen=True)
+class VjpClause:
+    """``vjp <name>(<wrt>)``: the harness is differentiable — wrap its call
+    in ``jax.custom_vjp`` with the registered backward body ``name`` (see
+    ``spec.vjp``), differentiating with respect to the listed binding keys.
+
+    The backward body receives ``(binding, ctx, primal_out, cotangent)``
+    and returns a dict mapping each ``wrt`` key to its gradient.  Keys not
+    listed are treated as non-differentiable constants (index structure,
+    routing tables); the rewriter closes over them, which is what lets a
+    host-marshaling kernel survive ``jax.grad``/``vmap`` — AD never looks
+    inside the forward."""
+    name: str
+    wrt: Tuple[str, ...]
+
+    def __str__(self):
+        return f"vjp {self.name}({', '.join(self.wrt)});"
+
+
 _DEFAULT_PLATFORMS = ("cpu", "tpu")
 
 
@@ -349,6 +369,7 @@ class HarnessDecl:
     tune: Tuple[TuneClause, ...] = ()        # declared schedule parameters
     constraints: Tuple[Constraint, ...] = ()  # schedule-space pruning
     fuse_epilogue: bool = False              # body applies detected epilogues
+    vjp: Optional[VjpClause] = None          # declared custom backward body
 
     def __str__(self):
         lines = [f"HARNESS {self.name} implements {', '.join(self.implements)}"]
@@ -371,6 +392,8 @@ class HarnessDecl:
         lines.extend(f"  {c}" for c in self.constraints)
         if self.fuse_epilogue:
             lines.append("  fuse epilogue;")
+        if self.vjp is not None:
+            lines.append(f"  {self.vjp}")
         return "\n".join(lines)
 
     def default_schedule(self) -> Dict[str, Any]:
@@ -442,7 +465,7 @@ _KEYWORDS = {"COMPUTATION", "HARNESS", "forall", "sum"}
 # HARNESS clause words are contextual (not reserved in expressions).
 _CLAUSES = {"platforms", "formats", "default_for", "host_only", "marshal",
             "persistent", "BeforeFirstExecution", "AfterLastExecution",
-            "tune", "constraint", "fuse"}
+            "tune", "constraint", "fuse", "vjp"}
 
 
 class ParseError(ValueError):
@@ -681,6 +704,7 @@ class _Parser:
         tune: List[TuneClause] = []
         constraints: List[Constraint] = []
         fuse_epilogue = False
+        vjp_clause: Optional[VjpClause] = None
         while True:
             t = self.peek()
             if t is None or t[0] == "kw":
@@ -749,6 +773,14 @@ class _Parser:
             elif word == "fuse":
                 self.expect("name", "epilogue")
                 fuse_epilogue = True
+            elif word == "vjp":
+                if vjp_clause is not None:
+                    raise self.error("duplicate vjp clause")
+                vname = self.expect("name")
+                self.expect("op", "(")
+                wrt = self.namelist()
+                self.expect("op", ")")
+                vjp_clause = VjpClause(vname, wrt)
             self.expect("op", ";")
         tune_names = {t.name for t in tune}
         for c in constraints:
@@ -763,7 +795,7 @@ class _Parser:
                            marshal=tuple(marshal), persistent=persistent,
                            before_first=before_first, after_last=after_last,
                            tune=tuple(tune), constraints=tuple(constraints),
-                           fuse_epilogue=fuse_epilogue)
+                           fuse_epilogue=fuse_epilogue, vjp=vjp_clause)
 
 
 def parse_spec(src: str) -> Spec:

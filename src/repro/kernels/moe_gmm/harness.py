@@ -19,6 +19,7 @@ HARNESS pallas.gmm implements moe_ffn
   tune dk in {128, 256};
   tune dimsem in {arbitrary, parallel};
   constraint (tm * fn) + (tm * dk) + (fn * dk) <= 163840;
+  vjp moe_ffn_bwd(x, gate, wg, wu, wd);
 """)
 def moe_gmm_pallas(b, ctx, *, tm=128, fn=128, dk=128, dimsem="arbitrary"):
     from repro.kernels.moe_gmm import ops as gmm_ops

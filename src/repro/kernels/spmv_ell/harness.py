@@ -29,6 +29,7 @@ HARNESS pallas.ell implements spmv_ell, spmv_jds
   tune rows_per_slab in {256, 64, 128, 512};
   tune dimsem in {arbitrary, parallel};
   fuse epilogue;
+  vjp spmv_ell_bwd(val, vector);
 """)
 def spmv_ell_pallas(b, ctx, *, rows_per_slab=256, dimsem="arbitrary"):
     """Direct ELL/JDS match -> VPU row-slab kernel."""
@@ -69,6 +70,7 @@ HARNESS pallas.ell implements spmv_csr, spmv_coo
   tune rows_per_slab in {256, 64, 128, 512};
   tune dimsem in {arbitrary, parallel};
   fuse epilogue;
+  vjp spmv_csr_bwd(a, iv);
 """)
 def spmv_ell_pallas_host(b, ctx, *, ell, rows_per_slab=256,
                          dimsem="arbitrary"):

@@ -40,13 +40,13 @@ from repro.core.pass_manager import (CompileOptions, LilacDeprecationWarning,
                                      lilac_optimize)
 from repro.core.plan import (ExecutablePlan, PlanBakeError, PlanCache,
                              PlanDonationError, default_plan_cache_path)
-from repro.core.spec import (HOOKS, REPACKS, SpecError, build_harnesses,
+from repro.core.spec import (HOOKS, REPACKS, VJPS, SpecError, build_harnesses,
                              harness, hook, register_builtins, register_spec,
-                             repack)
+                             repack, vjp)
 from repro.core.rewrite import apply_epilogue
 from repro.core.what_lang import (BUILTIN_SPECS, BUILTINS, Computation,
                                   Constraint, HarnessDecl, MarshalClause,
-                                  ParseError, Spec, TuneClause,
+                                  ParseError, Spec, TuneClause, VjpClause,
                                   enumerate_schedules, parse, parse_harness,
                                   parse_spec)
 
@@ -54,11 +54,11 @@ __all__ = [
     # entry point
     "compile", "CompileOptions", "LilacFunction",
     # spec surface
-    "harness", "repack", "hook", "register_spec", "register_builtins",
-    "build_harnesses", "SpecError", "REPACKS", "HOOKS",
+    "harness", "repack", "hook", "vjp", "register_spec", "register_builtins",
+    "build_harnesses", "SpecError", "REPACKS", "HOOKS", "VJPS",
     # language
     "parse", "parse_spec", "parse_harness", "ParseError", "Spec",
-    "Computation", "HarnessDecl", "MarshalClause", "TuneClause",
+    "Computation", "HarnessDecl", "MarshalClause", "TuneClause", "VjpClause",
     "Constraint", "enumerate_schedules", "BUILTINS", "BUILTIN_SPECS",
     # tunable schedules / epilogues
     "apply_epilogue",

@@ -22,15 +22,33 @@ def batch_pspec(rules) -> P:
     return P(b, None)
 
 
-def make_train_step(model: Model, opt_cfg: O.AdamWConfig):
+def make_train_step(model: Model, opt_cfg: O.AdamWConfig, *,
+                    lilac_grad: bool = False, lilac_options=None):
     """(params, opt_state, batch) -> (params, opt_state, metrics).
 
     With cfg.microbatches > 1 the global batch is split on the batch axis
     and gradients are accumulated in f32 over a scan — activation memory
     scales with 1/microbatches (how the 50B+ cells fit HBM); the optimizer
     applies once per step.
+
+    ``lilac_grad=True`` routes the per-(micro)batch value_and_grad through
+    ``lilac.compile``: the *gradient* jaxpr is detected and rewritten too,
+    so sparse computations in the backward pass (SpMVᵀ scatters, MoE
+    scatter-grad) get harnessed exactly like the forward — and once the
+    rewrite resolves, the whole value_and_grad bakes into one jitted plan
+    (see docs/transforms.md).  ``lilac_options`` is an optional
+    :class:`repro.lilac.CompileOptions` for that compile.
     """
     mb = max(1, model.cfg.microbatches)
+
+    value_and_grad = jax.value_and_grad(model.loss_fn)
+    if lilac_grad:
+        from repro import lilac
+        if lilac_options is not None:
+            value_and_grad = lilac.compile(value_and_grad,
+                                           options=lilac_options)
+        else:
+            value_and_grad = lilac.compile(value_and_grad)
 
     # gradient sharding hint: grads live in storage sharding (FSDP x TP).
     # Without this, the scan-backward accumulator round-trips full f32
@@ -51,7 +69,7 @@ def make_train_step(model: Model, opt_cfg: O.AdamWConfig):
 
     def train_step(params, opt_state, batch):
         if mb == 1:
-            loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+            loss, grads = value_and_grad(params, batch)
             grads = _grad_constraint(grads)
         else:
             split = jax.tree.map(
@@ -60,7 +78,7 @@ def make_train_step(model: Model, opt_cfg: O.AdamWConfig):
 
             def micro(carry, mbatch):
                 loss_acc, gacc = carry
-                loss_i, g_i = jax.value_and_grad(model.loss_fn)(params, mbatch)
+                loss_i, g_i = value_and_grad(params, mbatch)
                 g_i = _grad_constraint(g_i)
                 gacc = jax.tree.map(
                     lambda a, g: a + g.astype(jnp.float32), gacc, g_i)

@@ -146,6 +146,25 @@ def test_quickstart_example_runs():
     assert "speedup" in proc.stdout.lower()
 
 
+def test_train_sparse_moe_example_runs():
+    """Transform-composition flow: lilac.compile(value_and_grad) detects,
+    rewrites the gradient jaxpr, bakes, and the loss goes down."""
+    import os
+    import subprocess
+    import sys
+    proc = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__), "..",
+                                      "examples", "train_sparse_moe.py"),
+         "--steps", "6"],
+        capture_output=True, text=True, timeout=600,
+        env={**os.environ,
+             "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..",
+                                        "src")})
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "baked=1" in proc.stdout, proc.stdout[-2000:]
+    assert "bake_errors=[]" in proc.stdout, proc.stdout[-2000:]
+
+
 def test_serve_example_runs():
     """Full serving flow: prefill -> cache handoff -> jit decode loop."""
     import os

@@ -1,0 +1,115 @@
+"""Execute the fenced python examples in README.md and docs/*.md.
+
+The docs' executable contract (CI-enforced):
+
+* a fence opening with exactly ```` ```python ```` is an **executable
+  example** — this runner executes it;
+* a fence opening with ```` ```python no-run ```` is an **illustrative
+  fragment** (pseudo-library names, elided setup) — skipped, but GitHub
+  still syntax-highlights it (linguist keys on the first word);
+* blocks in one file share a namespace, in order, so a later example may
+  build on an earlier one's imports and values;
+* each file runs in a private working directory with private LiLAC cache
+  files, so examples neither pollute nor depend on ``~/.cache/lilac``.
+
+Usage::
+
+    python tools/run_doc_examples.py [files...]     # default: README.md docs/*.md
+
+Exit status is non-zero if any block raises; the failing file, block
+number and source line are reported.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+import tempfile
+import traceback
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# opening fence, capturing the info string; blocks end at a bare ```
+_FENCE_RE = re.compile(r"^```(\S[^\n]*)?$")
+
+
+def extract_blocks(text: str):
+    """Yield (start_line, info, source) per fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE_RE.match(lines[i])
+        if m and m.group(1):
+            info = m.group(1).strip()
+            start = i + 1
+            j = start
+            while j < len(lines) and lines[j].rstrip() != "```":
+                j += 1
+            yield start + 1, info, "\n".join(lines[start:j])
+            i = j + 1
+        else:
+            i += 1
+    return
+
+
+def runnable_blocks(text: str):
+    for line, info, src in extract_blocks(text):
+        words = info.split()
+        if words and words[0] == "python" and "no-run" not in words[1:]:
+            yield line, src
+
+
+def run_file(path: Path) -> int:
+    """Execute a file's examples in one shared namespace; returns the
+    number of failing blocks."""
+    blocks = list(runnable_blocks(path.read_text(encoding="utf-8")))
+    if not blocks:
+        print(f"  {path.relative_to(REPO)}: no executable blocks")
+        return 0
+    ns: dict = {"__name__": "__doc_example__"}
+    failures = 0
+    for n, (line, src) in enumerate(blocks, 1):
+        label = f"{path.relative_to(REPO)}:{line} (block {n}/{len(blocks)})"
+        try:
+            code = compile(src, f"{path.name}:{line}", "exec")
+            exec(code, ns)
+            print(f"  ok   {label}")
+        except Exception:
+            failures += 1
+            print(f"  FAIL {label}")
+            traceback.print_exc()
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv:
+        files = [Path(a).resolve() for a in argv]
+    else:
+        files = [REPO / "README.md"] + sorted((REPO / "docs").glob("*.md"))
+    sys.path.insert(0, str(REPO / "src"))
+    sys.path.insert(0, str(REPO))
+    failures = 0
+    with tempfile.TemporaryDirectory(prefix="lilac-doc-examples-") as tmp:
+        # private caches + cwd per run: examples must not read or write the
+        # user-level ~/.cache/lilac state
+        os.environ["LILAC_AUTOTUNE_CACHE"] = os.path.join(tmp, "autotune.json")
+        os.environ["LILAC_PLAN_CACHE"] = os.path.join(tmp, "plans.json")
+        old_cwd = os.getcwd()
+        os.chdir(tmp)
+        try:
+            for f in files:
+                print(f"{f.relative_to(REPO)}:")
+                failures += run_file(f)
+        finally:
+            os.chdir(old_cwd)
+    if failures:
+        print(f"{failures} doc example block(s) failed")
+        return 1
+    print("all doc examples passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
