@@ -29,6 +29,12 @@ def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
 
 
+# canonical implementations live in repro.serve.metrics (src/ cannot import
+# benchmarks/; benchmarks already import repro) — re-exported here so every
+# benchmark script shares one percentile/histogram definition
+from repro.serve.metrics import latency_histogram, percentiles  # noqa: E402,F401
+
+
 def sweep(variants: Dict[str, Callable], *args, reps: int = 20,
           warmup: int = 3) -> Dict[str, float]:
     """Median steady-state seconds per named variant — the timing loop

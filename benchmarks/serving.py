@@ -1,0 +1,219 @@
+"""Serving-tier benchmark: continuous vs static batching on baked plans.
+
+Three measurements over a smoke-sized causal LM (CPU-honest; the point is
+scheduler + dispatch behavior, not kernel FLOPs):
+
+1. **continuous vs static batching** — the same deterministic closed-burst
+   workload (mixed output lengths, all arrivals at t=0) through two
+   engines that differ only in scheduler mode.  Static batching admits a
+   batch and runs it to completion, so later requests queue behind the
+   current batch's longest member; continuous batching refills each slot
+   the step it frees.  Gate: ``continuous_batching_beats_static`` —
+   continuous p99 end-to-end time-per-token < static p99.
+
+2. **prewarm zero-detect** — drop the in-memory plan-cache view
+   (``reset_shared_plan_caches``), spy on ``Detector.detect``, then build
+   a FRESH engine and serve a first request.  The bucket-grid plans must
+   rehydrate from the persistent on-disk plan cache (seeded by the
+   engines of measurement 1 — or, in CI, by a previous job sharing
+   ``.lilac-cache/``): gate ``prewarmed_decode_zero_detect`` — zero
+   detector calls through prewarm AND the first served request.
+
+3. **ragged vs padded MoE batch packing** — group-by-expert ragged
+   packing feeding the ``moe_gmm`` kernel once with ``sum(T_i)`` tokens,
+   vs the per-request-padded rectangle; records the padding-waste
+   fraction and the timing ratio (recorded, not gated — interpret-mode
+   kernel timings off-TPU are not meaningful thresholds).
+
+CLI:
+    python benchmarks/serving.py [--quick] [--arch NAME]
+                                 [--n-requests N] [--out PATH]
+"""
+from __future__ import annotations
+
+import argparse
+import platform as _platform
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, percentiles, timeit, write_json_report
+from benchmarks.dispatch_overhead import _spy_detect
+from repro.configs.base import get_arch, smoke_config
+from repro.models.factory import build_model
+from repro.serve import (BucketPolicy, Engine, Request, ServeConfig,
+                         SyntheticWorkload, moe_ffn_padded, moe_ffn_ragged,
+                         padding_waste)
+
+
+def _quick_policy() -> BucketPolicy:
+    return BucketPolicy(batch=(1, 2, 4), seq=(32, 64))
+
+
+def _full_policy() -> BucketPolicy:
+    return BucketPolicy(batch=(1, 2, 4, 8), seq=(64, 128, 256))
+
+
+def _run_mode(model, params, policy, workload, mode: str) -> dict:
+    eng = Engine(model, params,
+                 ServeConfig(buckets=policy, mode=mode,
+                             prefill_lengths=workload.prompt_grid))
+    pairs = workload.requests()
+    reqs = [r for _, r in pairs]
+    snap = eng.run(pairs)
+    tpt = [r.time_per_token() for r in reqs
+           if r.time_per_token() is not None]
+    return {
+        "time_per_token_s": percentiles(tpt),
+        "ttft_s": snap["ttft_s"],
+        "decode_step_s": {k: snap["decode_step_s"][k]
+                          for k in ("p50", "p90", "p99", "mean")},
+        "steps": snap["steps"],
+        "batch_occupancy": snap["batch_occupancy"],
+        "bucket_hits": snap["buckets"]["hits"],
+        "bucket_misses": snap["buckets"]["misses"],
+        "cache_resizes": snap["buckets"]["cache_resizes"],
+        "finished": snap["requests"]["finished"],
+    }
+
+
+def _measure_packing(quick: bool) -> dict:
+    rng = np.random.default_rng(0)
+    E, D, F, K = 8, 64, 128, 2
+    lengths = [5, 17, 9, 30] if quick else [33, 110, 57, 190, 18, 242]
+    xs = [rng.standard_normal((t, D)).astype(np.float32) for t in lengths]
+    gates = [rng.random((t, K)).astype(np.float32) for t in lengths]
+    idxs = [rng.integers(0, E, (t, K)).astype(np.int32) for t in lengths]
+    wg = rng.standard_normal((E, D, F)).astype(np.float32) * 0.05
+    wu = rng.standard_normal((E, D, F)).astype(np.float32) * 0.05
+    wd = rng.standard_normal((E, F, D)).astype(np.float32) * 0.05
+
+    ragged = moe_ffn_ragged(xs, gates, idxs, wg, wu, wd, backend="gmm")
+    padded = moe_ffn_padded(xs, gates, idxs, wg, wu, wd)
+    matches = all(
+        np.allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)
+        for a, b in zip(ragged, padded))
+    reps = 5 if quick else 20
+    t_ragged = timeit(
+        lambda: moe_ffn_ragged(xs, gates, idxs, wg, wu, wd, backend="gmm"),
+        reps=reps, warmup=1)
+    t_padded = timeit(
+        lambda: moe_ffn_padded(xs, gates, idxs, wg, wu, wd),
+        reps=reps, warmup=1)
+    return {
+        "lengths": lengths,
+        "padding_waste": padding_waste(lengths),
+        "packed_matches_padded": bool(matches),
+        "t_ragged_s": t_ragged,
+        "t_padded_s": t_padded,
+        "padded_vs_ragged": t_padded / t_ragged,
+    }
+
+
+def run(quick: bool = False, arch: str = "olmoe-1b-7b",
+        n_requests: int | None = None, out: str | None = None) -> dict:
+    from repro import lilac
+
+    policy = _quick_policy() if quick else _full_policy()
+    n = n_requests or (12 if quick else 48)
+    cfg = smoke_config(get_arch(arch)).replace(moe_decode_impl="naive_flat")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    max_new = (4, 24) if quick else (8, 48)
+    # a small prompt-length grid: every prefill shape is prewarmed, so the
+    # serving measurement is pure scheduling + dispatch, no XLA compiles
+    grid = (4, 8, 12, 16) if quick else (8, 16, 32, 48)
+    workload = SyntheticWorkload(n_requests=n, vocab=cfg.vocab,
+                                 prompt_grid=grid, new_tokens=max_new,
+                                 rate_rps=0.0, seed=0)
+    report = {
+        "benchmark": "serving",
+        "quick": quick,
+        "arch": arch,
+        "platform": jax.default_backend(),
+        "host": _platform.machine(),
+        "buckets": policy.spec(),
+        "n_requests": n,
+        "plan_cache": str(lilac.default_plan_cache_path()),
+    }
+
+    # 1. continuous vs static on the identical closed burst ---------------
+    cont = _run_mode(model, params, policy, workload, "continuous")
+    stat = _run_mode(model, params, policy, workload, "static")
+    report["continuous"] = cont
+    report["static"] = stat
+    report["continuous_batching_beats_static"] = (
+        cont["time_per_token_s"]["p99"] < stat["time_per_token_s"]["p99"])
+    report["static_vs_continuous_p99"] = (
+        stat["time_per_token_s"]["p99"] / cont["time_per_token_s"]["p99"])
+    emit("serving.continuous", cont["time_per_token_s"]["p99"],
+         f"p50={cont['time_per_token_s']['p50'] * 1e3:.2f}ms "
+         f"occupancy={cont['batch_occupancy']:.2f}")
+    emit("serving.static", stat["time_per_token_s"]["p99"],
+         f"p50={stat['time_per_token_s']['p50'] * 1e3:.2f}ms "
+         f"occupancy={stat['batch_occupancy']:.2f}")
+    emit("serving.continuous_beats_static", 0.0,
+         f"{report['continuous_batching_beats_static']} "
+         f"(static/continuous p99 = "
+         f"{report['static_vs_continuous_p99']:.2f}x)")
+
+    # 2. prewarmed replica: zero detection on the request path ------------
+    from repro.core import plan as plan_mod
+    plan_mod.reset_shared_plan_caches()
+    calls, restore = _spy_detect()
+    try:
+        fresh = Engine(model, params,
+                       ServeConfig(buckets=policy, mode="continuous",
+                                   prefill_lengths=(8,)))
+        prewarm_calls = calls["n"]
+        probe = Request(prompt=np.arange(1, 9, dtype=np.int32),
+                        max_new_tokens=4)
+        assert fresh.submit(probe)
+        fresh.run_until_idle()
+        serve_calls = calls["n"] - prewarm_calls
+    finally:
+        restore()
+    pw = fresh.metrics.prewarm
+    report["warm_start"] = {
+        "grid": len(policy.grid()),
+        "baked": pw.get("baked"),
+        "plan_cache_hits": pw.get("plan_cache_hits"),
+        "prewarm_detect_calls": prewarm_calls,
+        "first_request_detect_calls": serve_calls,
+        "first_request_tokens": list(probe.tokens),
+    }
+    report["prewarmed_decode_zero_detect"] = (
+        prewarm_calls == 0 and serve_calls == 0
+        and pw.get("baked") == len(policy.grid()))
+    emit("serving.warm_start", 0.0,
+         f"prewarm_detect={prewarm_calls} serve_detect={serve_calls} "
+         f"baked={pw.get('baked')}/{len(policy.grid())} "
+         f"zero_detect={report['prewarmed_decode_zero_detect']}")
+
+    # 3. ragged vs padded MoE packing -------------------------------------
+    report["packing"] = _measure_packing(quick)
+    emit("serving.packing", report["packing"]["t_ragged_s"],
+         f"waste={report['packing']['padding_waste']:.2f} "
+         f"padded/ragged={report['packing']['padded_vs_ragged']:.2f}x "
+         f"match={report['packing']['packed_matches_padded']}")
+
+    if out:
+        write_json_report(out, report)
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: small grid, few requests")
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--n-requests", type=int, default=None)
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="JSON report path ('' to skip)")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, arch=args.arch, n_requests=args.n_requests,
+        out=args.out or None)
+
+
+if __name__ == "__main__":
+    main()

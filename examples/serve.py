@@ -1,62 +1,53 @@
-"""Batched serving driver: prefill a batch of prompts, then decode tokens
-autoregressively — the full serving flow (prefill cache -> decode cache
-handoff) on a reduced config.
+"""Serving-tier client: drive the continuous-batching engine
+(``repro.serve``) over a synthetic workload on baked plans.
 
-Run:  PYTHONPATH=src python examples/serve.py [--arch olmo-1b] [--tokens 16]
+The engine owns the whole flow this script used to hand-roll — bucketed
+plan prewarming, per-request prefill/cache install, per-step admit/evict,
+batched decode with per-slot positions — so the client is: build engine,
+submit workload, read metrics.
+
+Run:  PYTHONPATH=src python examples/serve.py [--arch olmoe-1b-7b]
+          [--requests 8] [--mode continuous|static]
 """
 import argparse
-import time
+import json
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_arch, smoke_config
-from repro.models import build_model
+from repro.serve import (BucketPolicy, ServeConfig, SyntheticWorkload,
+                         build_engine)
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--mode", default="continuous",
+                    choices=["continuous", "static"])
+    ap.add_argument("--tokens", type=int, default=12,
+                    help="max new tokens per request")
     args = ap.parse_args()
 
-    cfg = smoke_config(get_arch(args.arch))
-    if not cfg.causal:
-        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
-    model = build_model(cfg)
-    params = model.init(jax.random.key(0))
-    max_seq = args.prompt_len + args.tokens
+    grid = (4, 8, 12)            # prompt lengths -> prewarmed prefills
+    cfg = ServeConfig(buckets=BucketPolicy(batch=(1, 2, 4), seq=(32, 64)),
+                      mode=args.mode, prefill_lengths=grid)
+    eng = build_engine(args.arch, smoke=True, config=cfg)
+    pw = eng.metrics.prewarm
+    print(f"prewarm: {pw['baked']}/{pw['n_signatures']} bucket plans baked "
+          f"({pw['plan_cache_hits']} rehydrated from the plan cache)")
 
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(1, cfg.vocab, (args.batch, args.prompt_len))
-        .astype(np.int32))
+    wl = SyntheticWorkload(n_requests=args.requests,
+                           vocab=eng.model.cfg.vocab, prompt_grid=grid,
+                           new_tokens=(2, args.tokens), rate_rps=0.0, seed=0)
+    pairs = wl.requests()
+    snap = eng.run(pairs)
 
-    t0 = time.perf_counter()
-    logits, caches = model.prefill(params, {"tokens": prompts})
-    cache = model.cache_from_prefill(caches, args.prompt_len, max_seq)
-    t_prefill = time.perf_counter() - t0
-
-    decode = jax.jit(model.decode, donate_argnums=(1,))
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out_tokens = [tok]
-    t0 = time.perf_counter()
-    for i in range(args.tokens - 1):
-        pos = jnp.int32(args.prompt_len + i)
-        logits, cache = decode(params, cache, tok, pos)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
-
-    gen = jnp.concatenate(out_tokens, axis=1)
-    print(f"arch={cfg.name} batch={args.batch} "
-          f"prefill({args.prompt_len} toks): {t_prefill*1e3:.1f} ms, "
-          f"decode: {t_decode/max(args.tokens-1,1)*1e3:.2f} ms/token")
-    print("generated token ids (first row):", np.asarray(gen[0])[:12])
+    print(f"mode={args.mode} finished={snap['requests']['finished']} "
+          f"steps={snap['steps']} occupancy={snap['batch_occupancy']:.2f}")
+    print(f"ttft p50={snap['ttft_s']['p50'] * 1e3:.1f} ms  "
+          f"decode-step p50={snap['decode_step_s']['p50'] * 1e3:.2f} ms  "
+          f"bucket hits/misses={snap['buckets']['hits']}"
+          f"/{snap['buckets']['misses']}")
+    first = pairs[0][1]
+    print("first request tokens:", json.dumps(first.tokens[:10]))
 
 
 if __name__ == "__main__":

@@ -29,6 +29,11 @@ class ArchConfig:
     attn_layer_offset: int = 4
     moe_layer_period: int = 0     # jamba: 2
     moe_impl: str = "grouped"     # naive | lilac | grouped
+    # MoE formulation used on the one-token decode path.  "grouped_flat"
+    # (default) is the hand-written scatter dispatch; "naive_flat" emits
+    # the canonical dense-dispatch einsum form so a lilac-compiled decode
+    # step exposes the MoE to the detector (the serving tier uses this).
+    moe_decode_impl: str = "grouped_flat"
     capacity_factor: float = 2.0
     kv_chunk: int = 1024
     remat: bool = True

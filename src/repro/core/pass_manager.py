@@ -148,6 +148,12 @@ class LilacFunction:
         self._compiled: Dict[Tuple, CompiledEntry] = {}
         self._last_compiled: Optional[Tuple] = None  # (entry, in_tree, tmpl)
         self._last_plan: Optional[P.ExecutablePlan] = None
+        # recently-served baked plans across ALL signatures, move-to-front.
+        # Bucketed callers (the serving tier) rotate between a small set of
+        # shapes every few calls; checking each hot plan's O(arity) guard
+        # beats falling back to flatten -> template compare -> dict lookup
+        # on every bucket switch.
+        self._hot_plans: List[P.ExecutablePlan] = []
         self.last_report: Optional[D.DetectionReport] = None
         # (match, harness-name) pairs from the most recent call, in anchor
         # order — what actually ran, for benchmarks and tests.
@@ -342,6 +348,26 @@ class LilacFunction:
         outs = plan.jitted(*leaves)
         return jax.tree_util.tree_unflatten(plan.out_tree, outs)
 
+    _HOT_PLAN_LIMIT = 32
+
+    def _note_hot(self, plan: P.ExecutablePlan):
+        """Move-to-front a plan in the hot list (bounded)."""
+        hot = self._hot_plans
+        if hot and hot[0] is plan:
+            return
+        try:
+            hot.remove(plan)
+        except ValueError:
+            pass
+        hot.insert(0, plan)
+        del hot[self._HOT_PLAN_LIMIT:]
+
+    def _drop_hot(self, plan: P.ExecutablePlan):
+        try:
+            self._hot_plans.remove(plan)
+        except ValueError:
+            pass
+
     def __call__(self, *args, **kwargs):
         flat, in_tree = jax.tree_util.tree_flatten((args, kwargs))
         # steady-state fast path: guard check -> one jitted dispatch.
@@ -354,6 +380,16 @@ class LilacFunction:
             leaves = plan.match_and_unwrap(in_tree, flat, self.enabled)
             if leaves is not None:
                 return self._dispatch_plan(plan, leaves)
+        # hot-plan scan: bucketed callers rotate between a handful of
+        # signatures; any of them can serve without re-keying the entry
+        for hp in self._hot_plans:
+            if hp is plan or hp.registry_epoch != epoch:
+                continue
+            leaves = hp.match_and_unwrap(in_tree, flat, self.enabled)
+            if leaves is not None:
+                self._last_plan = hp
+                self._note_hot(hp)
+                return self._dispatch_plan(hp, leaves)
         entry, raw_flat, uflat, in_tree = self._prepare(
             args, kwargs, flat, in_tree)
         # second chance: another signature's plan was hot; this entry may
@@ -364,6 +400,7 @@ class LilacFunction:
             leaves = plan.match_and_unwrap(in_tree, raw_flat, self.enabled)
             if leaves is not None:
                 self._last_plan = plan
+                self._note_hot(plan)
                 return self._dispatch_plan(plan, leaves)
 
         matches = entry.report.matches if self.enabled else []
@@ -455,6 +492,7 @@ class LilacFunction:
         if entry.plan is not None:
             if self._last_plan is entry.plan:
                 self._last_plan = None
+            self._drop_hot(entry.plan)
             entry.plan = None
 
     def _maybe_bake(self, entry: CompiledEntry, matches,
@@ -519,6 +557,7 @@ class LilacFunction:
                 # so only the guards move — no re-trace, no re-compile
                 plan.refresh_guards(raw_flat)
                 self._last_plan = plan
+                self._note_hot(plan)
                 return
             if entry.rebakes >= 4 and plan.hits == 0:
                 # operands churn faster than the plan pays off: stop
@@ -542,8 +581,10 @@ class LilacFunction:
             return
         if plan is not None:
             entry.rebakes += 1
+            self._drop_hot(plan)
         entry.plan = baked
         self._last_plan = baked
+        self._note_hot(baked)
 
     def invalidate_plans(self):
         """Drop every baked plan (not the persistent cache): the next call
@@ -555,6 +596,7 @@ class LilacFunction:
             entry.bake_error = None
             entry.rebakes = 0     # fresh thrash tolerance, as documented
         self._last_plan = None
+        self._hot_plans.clear()
 
     def executable_plan(self, *args, **kwargs) -> Optional[P.ExecutablePlan]:
         """The baked plan serving this call signature, or None (not yet
@@ -562,6 +604,65 @@ class LilacFunction:
         does not execute anything."""
         entry, _, _, _ = self._prepare(args, kwargs)
         return entry.plan
+
+    def prewarm(self, *signatures) -> Dict[str, Any]:
+        """Bake a plan per call signature ahead of traffic.
+
+        Each signature is a tuple of positional arguments;
+        ``jax.ShapeDtypeStruct`` leaves are materialized as zeros, so
+        callers can prewarm from shape specs without allocating inputs
+        themselves.  Runs one concrete call per signature — the full
+        detect -> tune -> bake lifecycle happens HERE (or is skipped via
+        the persistent plan cache), never later on the request path.
+
+        Returns a report: per-signature ``{baked, detect_calls,
+        from_plan_cache}`` plus totals.  ``detect_calls`` is counted by
+        instrumenting this function's detector for the duration of the
+        call — on a plan-cache warm start it stays 0, which is exactly
+        the "pay detection once per fleet, not once per replica" property
+        the serving benchmark gates on.
+        """
+        import jax.numpy as jnp
+
+        def materialize(leaf):
+            if isinstance(leaf, jax.ShapeDtypeStruct):
+                return jnp.zeros(leaf.shape, leaf.dtype)
+            return leaf
+
+        detector = self.detector
+        orig_detect = detector.detect
+        calls = {"n": 0}
+
+        def spy(*a, **k):
+            calls["n"] += 1
+            return orig_detect(*a, **k)
+
+        detector.detect = spy       # instance attribute shadows the method
+        per_sig: List[Dict[str, Any]] = []
+        try:
+            for sig in signatures:
+                args = tuple(jax.tree.map(materialize, a) for a in sig)
+                before = calls["n"]
+                self(*args)
+                entry, _, _, _ = self._prepare(args, {})
+                rehydrated = bool(entry and any(
+                    "rehydrated from plan cache" in line
+                    for line in entry.report.log))
+                per_sig.append({
+                    "baked": bool(entry and entry.plan is not None),
+                    "detect_calls": calls["n"] - before,
+                    "from_plan_cache": rehydrated,
+                })
+        finally:
+            detector.__dict__.pop("detect", None)
+        return {
+            "signatures": per_sig,
+            "n_signatures": len(per_sig),
+            "baked": sum(1 for s in per_sig if s["baked"]),
+            "detect_calls": sum(s["detect_calls"] for s in per_sig),
+            "plan_cache_hits": sum(1 for s in per_sig
+                                   if s["from_plan_cache"]),
+        }
 
     def plan_info(self) -> Dict[str, Any]:
         """Introspection for benchmarks/tests: bake status per function."""

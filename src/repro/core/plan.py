@@ -682,6 +682,30 @@ class ExecutablePlan:
                 return False
         return True
 
+    def hoisted_nbytes(self) -> int:
+        """Total bytes of marshal products pinned by this plan (what the
+        serving tier reports as per-plan resident overhead)."""
+        total = 0
+        for bufs in self.hoisted.values():
+            for b in bufs:
+                total += int(getattr(b, "nbytes", 0) or 0)
+        return total
+
+    def describe(self) -> Dict[str, Any]:
+        """JSON-able summary for observability (serve/metrics, plan_info)."""
+        arr = [s for s in self.avals if s[0] == "a"]
+        return {
+            "arity": len(self.avals),
+            "array_leaves": [[list(s[1]), str(s[2])] for s in arr],
+            "selections": [name for _, name in self.selections],
+            "schedules": [s for s in self.schedules],
+            "guards": len(self.guards),
+            "const_guards": len(self.const_guards),
+            "hoisted_nbytes": self.hoisted_nbytes(),
+            "enabled": self.enabled,
+            "hits": self.hits,
+        }
+
 
 def bake_plan(*, closed_jaxpr, matches, needed, recorder: PlanRecorder,
               raw_flat, flat, in_tree, out_tree, report,

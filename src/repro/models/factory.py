@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +91,46 @@ class Model:
                 period[bkey] = ce
             out[f"p{j}"] = period
         return out
+
+    # -- batched-cache slot management (serving tier) --------------------------
+
+    def cache_set_slot(self, cache, slot: int, row_cache):
+        """Write a single-request cache (every leaf batch-1, same seq
+        capacity) into row ``slot`` of a batched cache."""
+        return jax.tree.map(
+            lambda full, one: full.at[slot].set(one[0].astype(full.dtype)),
+            cache, row_cache)
+
+    def cache_move_slot(self, cache, src: int, dst: int):
+        """Copy cache row ``src`` over row ``dst`` (slot compaction after
+        an eviction; the stale ``src`` row is left behind and simply never
+        read once the scheduler shrinks the active prefix)."""
+        return jax.tree.map(lambda a: a.at[dst].set(a[src]), cache)
+
+    def cache_resize(self, cache, B: Optional[int] = None,
+                     max_seq: Optional[int] = None):
+        """Re-bucket a cache: grow/shrink the batch axis (axis 0 of every
+        leaf) and the sequence-capacity axis of the k/v leaves (axis 1 —
+        keyed by leaf NAME, not rank: mamba's conv leaf also has 3 dims but
+        its axis 1 is the kernel width).  Growth pads with zeros; shrink
+        slices (the engine only shrinks when every active request fits)."""
+        def fix(path, a):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if B is not None and a.shape[0] != B:
+                if B > a.shape[0]:
+                    a = jnp.pad(a, ((0, B - a.shape[0]),)
+                                + ((0, 0),) * (a.ndim - 1))
+                else:
+                    a = a[:B]
+            if (max_seq is not None and name in ("k", "v")
+                    and a.shape[1] != max_seq):
+                if max_seq > a.shape[1]:
+                    a = jnp.pad(a, ((0, 0), (0, max_seq - a.shape[1]))
+                                + ((0, 0),) * (a.ndim - 2))
+                else:
+                    a = a[:, :max_seq]
+            return a
+        return jax.tree_util.tree_map_with_path(fix, cache)
 
     # -- dry-run inputs ---------------------------------------------------------
 

@@ -188,18 +188,31 @@ def attention_decode_stacked(p, x, k_cache, v_cache, pos, *,
     sliced periods in/out forced XLA to double-buffer the whole cache
     (measured: +0.5-1 TB of copies per step on granite-34b decode_32k —
     see EXPERIMENTS.md §Perf).
+
+    ``pos`` is a scalar (whole batch at one position — the classic path)
+    or a (B,) vector of per-row positions (continuous batching: every slot
+    is at a different depth).  The scalar path is left byte-for-byte
+    unchanged so existing baked plans keep matching.
     """
     B = x.shape[0]
-    positions = jnp.full((B, 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    positions = pos[:, None] if per_slot else jnp.full((B, 1), pos, jnp.int32)
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
     q = rope(q, positions, theta)
     k = rope(k, positions, theta)
-    k_cache = jax.lax.dynamic_update_slice(
-        k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+    if per_slot:
+        write = jax.vmap(
+            lambda c, t, pp: jax.lax.dynamic_update_slice(c, t, (pp, 0, 0)))
+        k_cache = write(k_cache, k.astype(k_cache.dtype), pos)
+        v_cache = write(v_cache, v.astype(v_cache.dtype), pos)
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
     ck, cv = k_cache, v_cache
     Smax, KV = ck.shape[1], ck.shape[2]
     H = q.shape[2]
@@ -207,7 +220,11 @@ def attention_decode_stacked(p, x, k_cache, v_cache, pos, *,
     qg = q.reshape(B, 1, KV, G, -1)
     logits = jnp.einsum("bskgd,bckd->bskgc", qg.astype(F32),
                         ck.astype(F32)) / np.sqrt(q.shape[-1])
-    mask = jnp.arange(Smax)[None, None, None, None, :] <= pos
+    if per_slot:
+        mask = (jnp.arange(Smax)[None, None, None, None, :]
+                <= pos[:, None, None, None, None])
+    else:
+        mask = jnp.arange(Smax)[None, None, None, None, :] <= pos
     logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bskgc,bckd->bskgd", probs, cv.astype(F32))
@@ -493,6 +510,13 @@ def moe_block(p, x, *, topk: int, impl: str = "grouped",
                                    idx.reshape(1, B * S, -1), wg, wu, wd,
                                    capacity_factor=capacity_factor,
                                    shard=False)
+        out = out.reshape(B, S, D)
+    elif impl == "naive_flat":
+        # one flat naive call over all B*S tokens — the exact 2-D dense
+        # dispatch the LiLAC detector matches, so compiling a decode step
+        # that uses this impl exposes the MoE to detect/tune/bake
+        out = _moe_naive_2d(x.reshape(B * S, D), gate.reshape(B * S, -1),
+                            idx.reshape(B * S, -1), wg, wu, wd)
         out = out.reshape(B, S, D)
     else:
         raise ValueError(impl)

@@ -402,7 +402,7 @@ def decode_block(cfg, bp, x, ce, pos, *, mixer: str, ffn: str):
         x = x + L.mlp_block(bp["mlp"], h)
     elif ffn == "moe":
         out, _ = L.moe_block(bp["moe"], h, topk=cfg.moe_topk,
-                             impl="grouped_flat",
+                             impl=cfg.moe_decode_impl,
                              capacity_factor=cfg.capacity_factor)
         x = x + out
     elif ffn == "channelmix":
@@ -413,7 +413,8 @@ def decode_block(cfg, bp, x, ce, pos, *, mixer: str, ffn: str):
 
 
 def decode_step(cfg, params, cache, tokens, pos):
-    """tokens: (B, 1) int32; pos: scalar int32 (current write position).
+    """tokens: (B, 1) int32; pos: scalar int32 (whole batch at one write
+    position) or (B,) int32 (per-slot positions — continuous batching).
     Returns (logits (B, V), new_cache).
 
     The period loop is UNROLLED (static Python loop over statically-sliced

@@ -1,0 +1,32 @@
+"""repro.serve — continuous-batching serving tier on baked LiLAC plans.
+
+Public surface::
+
+    from repro.serve import (Engine, ServeConfig, build_engine,
+                             Scheduler, Request, SchedulerFull,
+                             BucketPolicy, BucketError, parse_buckets,
+                             default_buckets,
+                             ServeMetrics, percentiles, latency_histogram,
+                             SyntheticWorkload)
+
+See ``docs/serving.md`` for the scheduler lifecycle, the bucket/prewarm
+semantics and the metrics schema.
+"""
+from repro.serve.buckets import (BucketError, BucketPolicy, default_buckets,
+                                 parse_buckets)
+from repro.serve.engine import Engine, ServeConfig, build_engine
+from repro.serve.metrics import (ServeMetrics, latency_histogram,
+                                 percentiles)
+from repro.serve.packing import (moe_ffn_padded, moe_ffn_ragged, pack,
+                                 padding_waste, unpack)
+from repro.serve.scheduler import Request, Scheduler, SchedulerFull
+from repro.serve.workload import SyntheticWorkload
+
+__all__ = [
+    "BucketError", "BucketPolicy", "default_buckets", "parse_buckets",
+    "Engine", "ServeConfig", "build_engine",
+    "ServeMetrics", "latency_histogram", "percentiles",
+    "moe_ffn_padded", "moe_ffn_ragged", "pack", "padding_waste", "unpack",
+    "Request", "Scheduler", "SchedulerFull",
+    "SyntheticWorkload",
+]

@@ -1,0 +1,109 @@
+"""Ragged batch packing for the sparse-MoE / grouped-matmul path.
+
+Requests in a serving batch carry different token counts (chunked
+prefill, speculative verification, mixed prompt tails).  The dense way to
+batch them is per-request padding — ``(R, T_max, D)`` with every short
+request padded to the longest — which wastes FLOPs and, worse, routes
+*padding tokens* through the MoE router into the expert buckets.
+
+The grouped-matmul kernel (``repro.kernels.moe_gmm``) doesn't need a
+rectangle: it takes a FLAT ``(T, D)`` token batch and groups rows by
+expert internally (sort + group-aligned tiles).  So the ragged pack is a
+concatenation: requests' tokens are laid end to end, the single grouped
+call does exactly ``sum(T_i)`` tokens of work, and per-request outputs
+are sliced back out by offset.  Per-token math is independent of batch
+layout, so packed outputs equal the per-request results.
+
+``moe_ffn_ragged`` is the engine/benchmark entry point; ``pack`` /
+``unpack`` are the layout helpers; ``padding_waste`` quantifies what the
+rectangle would have burned.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack(parts: Sequence[Any]) -> Tuple[jax.Array, np.ndarray]:
+    """Concatenate ragged ``(T_i, ...)`` arrays into one flat array plus
+    the ``(R+1,)`` offset table (``flat[offsets[i]:offsets[i+1]]`` is
+    request ``i``)."""
+    if not parts:
+        raise ValueError("nothing to pack")
+    lengths = [int(p.shape[0]) for p in parts]
+    offsets = np.concatenate([[0], np.cumsum(lengths)]).astype(np.int64)
+    return jnp.concatenate(list(parts), axis=0), offsets
+
+
+def unpack(flat: Any, offsets: np.ndarray) -> List[Any]:
+    """Inverse of :func:`pack`."""
+    return [flat[int(offsets[i]):int(offsets[i + 1])]
+            for i in range(len(offsets) - 1)]
+
+
+def padding_waste(lengths: Sequence[int],
+                  pad_to: Optional[int] = None) -> float:
+    """Fraction of a padded-rectangle batch that is padding: what the
+    per-request-padded layout wastes relative to the ragged pack."""
+    lengths = [int(x) for x in lengths]
+    if not lengths:
+        return 0.0
+    tmax = max(max(lengths), pad_to or 0)
+    total = tmax * len(lengths)
+    return 1.0 - sum(lengths) / total
+
+
+def moe_ffn_ragged(xs: Sequence[Any], gates: Sequence[Any],
+                   idxs: Sequence[Any], wg, wu, wd, *,
+                   backend: str = "gmm",
+                   interpret: Optional[bool] = None) -> List[Any]:
+    """One grouped-matmul call over the ragged pack of ``R`` requests.
+
+    ``xs[i]``: (T_i, D); ``gates[i]``/``idxs[i]``: (T_i, K).  Returns the
+    per-request ``(T_i, D)`` outputs.  ``backend="gmm"`` feeds the
+    existing ``moe_gmm`` Pallas kernel directly (group-by-expert packing
+    happens inside: sort + aligned row tiles — zero padding rows beyond
+    tile alignment); ``backend="naive"`` is the dense-dispatch oracle the
+    tests compare against.
+    """
+    flat_x, offsets = pack(xs)
+    flat_g, _ = pack(gates)
+    flat_i, _ = pack(idxs)
+    if backend == "gmm":
+        from repro.kernels.moe_gmm import ops as gmm_ops
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        out = gmm_ops.moe_ffn(flat_x, flat_g, flat_i, wg, wu, wd,
+                              interpret=interpret)
+    elif backend == "naive":
+        from repro.models.layers import _moe_naive_2d
+        out = _moe_naive_2d(flat_x, flat_g, flat_i, wg, wu, wd)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    return unpack(out, offsets)
+
+
+def moe_ffn_padded(xs: Sequence[Any], gates: Sequence[Any],
+                   idxs: Sequence[Any], wg, wu, wd) -> List[Any]:
+    """The per-request-padded baseline: pad every request to ``T_max``,
+    run the rectangle, slice the padding back off.  Routing gates of the
+    padding rows are zeroed so padding cannot contaminate real tokens —
+    the cost is pure wasted work, which is the point being measured."""
+    from repro.models.layers import _moe_naive_2d
+    lengths = [int(x.shape[0]) for x in xs]
+    tmax = max(lengths)
+
+    def padrow(a):
+        return jnp.pad(a, ((0, tmax - a.shape[0]),) + ((0, 0),) * (a.ndim - 1))
+
+    px = jnp.stack([padrow(x) for x in xs])               # (R, Tmax, D)
+    pg = jnp.stack([padrow(g) for g in gates])
+    pi = jnp.stack([padrow(i) for i in idxs])
+    mask = jnp.stack([jnp.arange(tmax) < n for n in lengths])
+    pg = pg * mask[..., None].astype(pg.dtype)
+    out = jax.vmap(lambda x, g, i: _moe_naive_2d(x, g, i, wg, wu, wd))(
+        px, pg, pi)
+    return [out[r, :lengths[r]] for r in range(len(xs))]

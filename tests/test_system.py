@@ -166,17 +166,19 @@ def test_train_sparse_moe_example_runs():
 
 
 def test_serve_example_runs():
-    """Full serving flow: prefill -> cache handoff -> jit decode loop."""
+    """Full serving flow through the repro.serve client: prewarm ->
+    continuous batching -> metrics."""
     import os
     import subprocess
     import sys
     proc = subprocess.run(
         [sys.executable, os.path.join(os.path.dirname(__file__), "..",
                                       "examples", "serve.py"),
-         "--tokens", "6", "--batch", "2"],
+         "--requests", "3", "--tokens", "6"],
         capture_output=True, text=True, timeout=600,
         env={**os.environ,
              "PYTHONPATH": os.path.join(os.path.dirname(__file__), "..",
                                         "src")})
     assert proc.returncode == 0, proc.stderr[-2000:]
-    assert "ms/token" in proc.stdout
+    assert "bucket plans baked" in proc.stdout
+    assert "finished=3" in proc.stdout
