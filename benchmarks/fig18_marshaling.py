@@ -127,13 +127,20 @@ def run(reps: int = 5, iters: int = 10, quick: bool = False,
             "bcsr_path": bcsr_plan.get("last_path", []),
             "bcsr_rode_cached_intermediate":
                 bool(bcsr_plan.get("shared_prefix_hits", 0)),
+            # per-entry ride accounting: how many planned paths entered at
+            # a cached intermediate, and the bytes they never rebuilt —
+            # the sharing structure the joint plan search prices at cost 0
+            "rides": sum(s.get("rides", 0) for s in stats.values()),
+            "shared_prefix_bytes": sum(s.get("shared_prefix_bytes", 0)
+                                       for s in stats.values()),
             "plan_stats": stats,
         }
         prob_report["shared_plan"] = shared
         emit(f"fig18.{prob_name}.shared_plan", t_shared,
              f"win={shared['shared_plan_win']:.2f}x over cold plane; "
              f"path={'->'.join(shared['bcsr_path'])} "
-             f"shared_prefix={shared['bcsr_rode_cached_intermediate']}")
+             f"rides={shared['rides']} "
+             f"shared_prefix_bytes={shared['shared_prefix_bytes']}")
         report["problems"][prob_name] = prob_report
 
     report["shared_plan_always_rides_intermediate"] = all(

@@ -46,6 +46,19 @@ Schema-2 records migrate as *priors*: their kernel-level winner ranks
 first in the sweep, but the record is never served as-is when any live
 candidate declares schedule variants — no stale winners, again.
 
+Since schema 4 the sweep has a third dimension: at call sites with a
+detected epilogue, every ``fuse epilogue`` candidate contributes BOTH its
+fused (in-kernel) and unfused (``rewrite.apply_epilogue`` after the call)
+realizations as variants, so fusion is pinned only where it measured
+faster (``fused_epilogue_always_faster`` is false in practice).  Records
+additionally expose per-candidate measured components (``variants``: every
+surviving (schedule, fuse, seconds) triple per harness) — the inputs the
+joint whole-program plan search (``repro.core.plan_search``) re-costs
+without re-timing.  Schema-3 records migrate in place: served verbatim at
+sites where the fuse dimension cannot change the answer (no epilogue, or
+no fuse-capable candidate — cross-process zero re-timing preserved) and
+demoted to sweep priors only where it can.
+
 Environment knobs:
 
   LILAC_AUTOTUNE_CACHE         cache file path
@@ -69,7 +82,7 @@ import numpy as np
 
 from repro.core.jsonstore import JsonStore
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 _ENV_PATH = "LILAC_AUTOTUNE_CACHE"
 _ENV_BUDGET = "LILAC_AUTOTUNE_BUDGET"
 _ENV_MAX_VARIANTS = "LILAC_AUTOTUNE_MAX_VARIANTS"
@@ -112,6 +125,20 @@ def schedule_key(schedule: Optional[Dict[str, Any]]) -> str:
     if not schedule:
         return "default"
     return ",".join(f"{k}={schedule[k]}" for k in sorted(schedule))
+
+
+def variant_key(schedule: Optional[Dict[str, Any]],
+                fuse: Optional[bool] = None) -> str:
+    """Record key for a full (schedule, fuse) variant.  ``fuse=None``
+    (no epilogue at the site, or a harness that can't fuse) keeps the
+    historical ``schedule_key`` form, so schema-3 ``variant_s`` keys stay
+    valid everywhere the fuse dimension doesn't exist."""
+    k = schedule_key(schedule)
+    if fuse is True:
+        return k + "|fused"
+    if fuse is False:
+        return k + "|unfused"
+    return k
 
 
 # ---------------------------------------------------------------------------
@@ -217,15 +244,17 @@ class AutotuneCache(JsonStore):
     :class:`repro.core.jsonstore.JsonStore` disk protocol with nested
     per-``(signature, mode)`` entries and schema-1/2 migration).
 
-    Layout (schema 3)::
+    Layout (schema 4)::
 
-        {"schema": 3, "registry": "<fingerprint>",
+        {"schema": 4, "registry": "<fingerprint>",
          "entries": {"<sig>": {"<mode>": {
              "harness": ..., "best_s": ..., "timings": {...},
              "marshal_s": {...}, "reuse": 100.0, "amortized_s": {...},
              "cost_model": "amortized" | "kernel_only",
              "schedule": {...} | null, "schedules": {...},
-             "variant_s": {...}, "schedule_swept": true}}}}
+             "fuse": true | false | null, "fuses": {...},
+             "variant_s": {...}, "variants": {...},
+             "schedule_swept": true, "fuse_swept": true}}}}
 
     ``timings`` are steady-state kernel seconds per harness (its best
     variant); ``marshal_s`` the measured conversion-path seconds per
@@ -233,9 +262,13 @@ class AutotuneCache(JsonStore):
     frequency (``reuse``), which is what the winner minimizes.
     ``schedule`` is the winning harness's swept tune-parameter assignment
     (null for untuned winners), ``schedules`` each harness's best variant,
-    and ``variant_s`` per-variant steady-state seconds
-    (``{harness: {schedule_key: s}}``) for the survivors of the
-    successive-halving sweep.
+    ``fuse``/``fuses`` the analogous fused-epilogue decisions (null where
+    the dimension doesn't exist), ``variant_s`` per-variant steady-state
+    seconds (``{harness: {variant_key: s}}``) for the survivors of the
+    successive-halving sweep, and ``variants`` the same survivors as
+    structured ``{harness: [[schedule, fuse, seconds], ...]}`` triples —
+    the per-candidate component table the joint plan search
+    (``repro.core.plan_search``) consumes.
 
     Schema-1 files are migrated in place on load: records become
     ``cost_model: "kernel_only"`` (their winner predates marshal-aware
@@ -244,7 +277,10 @@ class AutotuneCache(JsonStore):
     ``schedule_swept: false``: their kernel-level winner is kept as a
     *prior* (it ranks first in the next sweep) but the record is
     re-measured instead of served whenever a live candidate declares
-    schedule variants.
+    schedule variants.  Schema-3 records gain ``fuse_swept: false``: they
+    are served verbatim wherever the fused-epilogue dimension can't change
+    the answer and demote to sweep priors at epilogue sites with a
+    fuse-capable candidate.
 
     Writes are atomic (tempfile in the same directory + ``os.replace``) and
     merge-on-save under an advisory lock, so concurrent tuners never
@@ -252,7 +288,7 @@ class AutotuneCache(JsonStore):
     """
 
     schema_version = SCHEMA_VERSION
-    readable_schemas = (1, 2)
+    readable_schemas = (1, 2, 3)
 
     def __init__(self, path: Optional[os.PathLike] = None,
                  registry_fingerprint: str = ""):
@@ -273,7 +309,9 @@ class AutotuneCache(JsonStore):
     def _migrate(self, entries, schema):
         if schema == 1:
             entries = self._migrate_v1(entries)
-        return self._migrate_v2(entries)
+        if schema <= 2:
+            entries = self._migrate_v2(entries)
+        return self._migrate_v3(entries)
 
     def _merge(self, base, incoming, overwrite):
         """Entries nest per signature then mode: merge at the mode level so
@@ -305,7 +343,7 @@ class AutotuneCache(JsonStore):
                 rec.setdefault("cost_model", "kernel_only")
                 rec.setdefault("marshal_s", {})
                 rec.setdefault("amortized_s", dict(rec.get("timings", {})))
-                # counted once per record, in _migrate_v2 (every legacy
+                # counted once per record, in _migrate_v3 (every legacy
                 # record passes through it)
                 new_modes[mode] = rec
             if new_modes:
@@ -329,6 +367,28 @@ class AutotuneCache(JsonStore):
                     rec.setdefault("schedules", {})
                     rec.setdefault("variant_s", {})
                     rec["schedule_swept"] = False
+                    # counted once per record, in _migrate_v3
+        return entries
+
+    def _migrate_v3(self, entries: Dict[str, Dict[str, Any]]
+                    ) -> Dict[str, Dict[str, Any]]:
+        """Schema 3 -> 4: records predate the fused-epilogue variant
+        dimension and the structured per-candidate ``variants`` table.
+        Their winner stays fully valid wherever fusion isn't a choice (no
+        epilogue at the site, or no fuse-capable candidate) — those are
+        served with zero re-timing; at epilogue sites with a fuse-capable
+        candidate the winner demotes to a sweep *prior* (ranked first)."""
+        for modes in entries.values():
+            if not isinstance(modes, dict):
+                continue
+            for rec in modes.values():
+                if not isinstance(rec, dict) or "harness" not in rec:
+                    continue
+                if "fuse_swept" not in rec:
+                    rec.setdefault("fuse", None)
+                    rec.setdefault("fuses", {})
+                    rec.setdefault("variants", {})
+                    rec["fuse_swept"] = False
                     self.stats.migrations += 1
         return entries
 
@@ -442,6 +502,9 @@ class Decision:
     # winning schedule variant (tune-param assignment); None when the
     # winner has no declared tune space
     schedule: Optional[Dict[str, Any]] = None
+    # winning fused-epilogue realization: True/False where the dimension
+    # was swept, None where it doesn't exist (no epilogue / can't fuse)
+    fuse: Optional[bool] = None
 
     @property
     def definitive(self) -> bool:
@@ -450,10 +513,10 @@ class Decision:
         re-tunable on later concrete calls."""
         return self.source in DEFINITIVE_SOURCES
 
-    def as_pin(self) -> Tuple[str, Optional[Dict[str, Any]]]:
-        """The JSON-serializable ``(harness, schedule)`` pair the pass
-        manager stores in ``CompiledEntry.pins`` and the plan cache."""
-        return (self.harness, self.schedule)
+    def as_pin(self) -> Tuple[str, Optional[Dict[str, Any]], Optional[bool]]:
+        """The JSON-serializable ``(harness, schedule, fuse)`` triple the
+        pass manager stores in ``CompiledEntry.pins`` and the plan cache."""
+        return (self.harness, self.schedule, self.fuse)
 
 
 class Autotuner:
@@ -506,15 +569,27 @@ class Autotuner:
     @staticmethod
     def _as_runtime(h, binding, ctx):
         """One candidate call exactly as the rewrite will run it: for a
-        match with a detected epilogue, non-fusing harnesses pay the
+        match with a detected epilogue, unfused realizations pay the
         bias+activation after the call (rewrite.apply_epilogue) while
-        ``fuse epilogue`` harnesses pay it in-kernel — timing both the
-        same way would bias selection against the fused kernels."""
-        out = h(binding, ctx)
-        ep = getattr(ctx, "epilogue", None)
-        if ep is not None and not getattr(h, "fuse_epilogue", False):
-            from repro.core.rewrite import apply_epilogue
+        fused ones pay it in-kernel — timing both the same way would bias
+        selection.  ``ctx.fuse`` selects the realization for fuse-capable
+        harnesses (None = the declared default, i.e. fused), mirroring
+        ``rewrite._eval_anchor``."""
+        from repro.core.rewrite import apply_epilogue, effective_fuse
 
+        ep = getattr(ctx, "epilogue", None)
+        fused = effective_fuse(h, ctx)
+        if ep is not None and not fused and getattr(h, "fuse_epilogue", False):
+            # unfused realization of a fuse-capable harness: hide the
+            # epilogue from the body, pay it at the jnp level below
+            ctx.epilogue = None
+            try:
+                out = h(binding, ctx)
+            finally:
+                ctx.epilogue = ep
+        else:
+            out = h(binding, ctx)
+        if ep is not None and not fused:
             out = apply_epilogue(out, binding.get("bias"), ep)
         return out
 
@@ -612,63 +687,92 @@ class Autotuner:
         return {n: t + marshal_s.get(n, 0.0) / max(reuse, 1.0)
                 for n, t in timings.items()}
 
-    def _variant_pool(self, ranked: Sequence[Any]
-                      ) -> List[Tuple[Any, Optional[Dict[str, Any]]]]:
+    def _variant_pool(self, ranked: Sequence[Any],
+                      epilogue: Optional[str] = None
+                      ) -> List[Tuple[Any, Optional[Dict[str, Any]],
+                                      Optional[bool]]]:
         """The sweep pool: every candidate contributes its schedule family
-        (or a single ``None`` entry when untuned), capped at
-        ``max_variants``.  Default schedules always survive the cap; the
-        remainder fills round-robin so no harness monopolizes the budget."""
-        families = [(h, list(getattr(h, "schedules", ()) or ()) or [None])
-                    for h in ranked]
+        (or a single ``None`` entry when untuned) crossed with its fusion
+        realizations — at an epilogue site a ``fuse epilogue`` harness
+        enters both fused and unfused (``fuse=None`` elsewhere) — capped at
+        ``max_variants``.  Default variants (default schedule, fused)
+        always survive the cap; the remainder fills round-robin so no
+        harness monopolizes the budget."""
+        families = []
+        for h in ranked:
+            scheds = list(getattr(h, "schedules", ()) or ()) or [None]
+            fuses = ([True, False]
+                     if epilogue is not None
+                     and getattr(h, "fuse_epilogue", False) else [None])
+            families.append((h, [(s, f) for s in scheds for f in fuses]))
         cap = max(len(families), self._max_variants())
         total = sum(len(f) for _, f in families)
         if total <= cap:
-            return [(h, s) for h, fam in families for s in fam]
-        pool = [(h, fam[0]) for h, fam in families]
+            return [(h, s, f) for h, fam in families for s, f in fam]
+        pool = [(h,) + fam[0] for h, fam in families]
         depth = 1
         while len(pool) < cap:
             added = False
             for h, fam in families:
                 if depth < len(fam) and len(pool) < cap:
-                    pool.append((h, fam[depth]))
+                    pool.append((h,) + fam[depth])
                     added = True
             if not added:
                 break
             depth += 1
         return pool
 
+    def _time_pool(self, h, binding, ctx, mode, operands,
+                   schedule: Optional[Dict[str, Any]],
+                   fuse: Optional[bool], reps: int) -> Optional[float]:
+        """Time one (harness, schedule, fuse) pool entry.  The fusion
+        choice travels on ``ctx.fuse`` (set/restored here) so
+        ``_time_variant``'s signature — which external riggings patch —
+        stays (harness, binding, ctx, mode, operands, schedule, reps)."""
+        prev = getattr(ctx, "fuse", None)
+        if hasattr(ctx, "fuse"):
+            ctx.fuse = fuse
+        try:
+            return self._time_variant(h, binding, ctx, mode, operands,
+                                      schedule, reps)
+        finally:
+            if hasattr(ctx, "fuse"):
+                ctx.fuse = prev
+
     def _sweep(self, pool, binding, ctx, mode, operands
-               ) -> Dict[Tuple[str, str], Tuple[Any, Optional[Dict], float]]:
+               ) -> Dict[Tuple[str, str],
+                         Tuple[Any, Optional[Dict], Optional[bool], float]]:
         """Successive halving over the variant pool: cheap single-iteration
         elimination rounds shrink the pool to the steady-state budget, then
         the survivors are timed properly.  Returns
-        ``(harness_name, schedule_key) -> (harness, schedule, seconds)``
-        for the survivors."""
+        ``(harness_name, variant_key) -> (harness, schedule, fuse,
+        seconds)`` for the survivors."""
         budget = max(1, self._budget())
         survivors = list(pool)
         while len(survivors) > budget:
             scored = []
-            for h, sched in survivors:
+            for h, sched, fuse in survivors:
                 self.stats.elimination_calls += 1
-                t = self._time_variant(h, binding, ctx, mode, operands,
-                                       sched, reps=1)
+                t = self._time_pool(h, binding, ctx, mode, operands,
+                                    sched, fuse, reps=1)
                 if t is not None:
-                    scored.append((t, h, sched))
+                    scored.append((t, h, sched, fuse))
             if not scored:
                 return {}
             scored.sort(key=lambda x: x[0])
             keep = max(budget, (len(scored) + 1) // 2)
             if keep >= len(scored):
-                survivors = [(h, s) for _, h, s in scored]
+                survivors = [(h, s, f) for _, h, s, f in scored]
                 break
-            survivors = [(h, s) for _, h, s in scored[:keep]]
-        out: Dict[Tuple[str, str], Tuple[Any, Optional[Dict], float]] = {}
-        for h, sched in survivors:
+            survivors = [(h, s, f) for _, h, s, f in scored[:keep]]
+        out: Dict[Tuple[str, str],
+                  Tuple[Any, Optional[Dict], Optional[bool], float]] = {}
+        for h, sched, fuse in survivors:
             self.stats.timing_calls += 1
-            t = self._time_variant(h, binding, ctx, mode, operands,
-                                   sched, reps=self.reps)
+            t = self._time_pool(h, binding, ctx, mode, operands,
+                                sched, fuse, reps=self.reps)
             if t is not None:
-                out[(h.name, schedule_key(sched))] = (h, sched, t)
+                out[(h.name, variant_key(sched, fuse))] = (h, sched, fuse, t)
         return out
 
     def measure(self, cands: Sequence[Any], binding: Dict[str, Any],
@@ -677,14 +781,19 @@ class Autotuner:
                 prior_name: Optional[str] = None,
                 ) -> Tuple[Optional[str], Dict[str, float],
                            Dict[str, float], Dict[str, Optional[Dict]],
-                           Dict[str, Dict[str, float]]]:
-        """Sweep the (harness, schedule) cross-product under the budget;
-        returns (winner_name, per-harness best kernel timings, marshal-path
-        seconds, per-harness best schedule, per-variant seconds).  The
-        winner minimizes the repack-amortized cost of its best variant, not
-        raw kernel time.  ``prior_name`` (a migrated kernel-level winner)
-        outranks even the platform default in sweep order, so budget
-        truncation keeps the prior in play."""
+                           Dict[str, Dict[str, float]],
+                           Dict[str, Optional[bool]],
+                           Dict[str, List[Tuple[Optional[Dict],
+                                                Optional[bool], float]]]]:
+        """Sweep the (harness, schedule, fuse) cross-product under the
+        budget; returns (winner_name, per-harness best kernel timings,
+        marshal-path seconds, per-harness best schedule, per-variant
+        seconds, per-harness best fuse, per-harness surviving
+        (schedule, fuse, seconds) triples).  The winner minimizes the
+        repack-amortized cost of its best variant, not raw kernel time.
+        ``prior_name`` (a migrated kernel-level winner) outranks even the
+        platform default in sweep order, so budget truncation keeps the
+        prior in play."""
         import jax
 
         ranked = sorted(
@@ -700,37 +809,43 @@ class Autotuner:
             operands = (dict(binding) if concrete
                         else synthesize_operands(binding))
             if operands is None:
-                return None, {}, {}, {}, {}
-        pool = self._variant_pool(ranked)
+                return None, {}, {}, {}, {}, {}, {}
+        pool = self._variant_pool(ranked, getattr(ctx, "epilogue", None))
         if len(pool) <= max(1, self._budget()):
             # no sweep needed: steady-state time everything directly
             measured = {}
-            for h, sched in pool:
+            for h, sched, fuse in pool:
                 self.stats.timing_calls += 1
-                t = self._time_variant(h, binding, ctx, mode, operands,
-                                       sched, reps=self.reps)
+                t = self._time_pool(h, binding, ctx, mode, operands,
+                                    sched, fuse, reps=self.reps)
                 if t is not None:
-                    measured[(h.name, schedule_key(sched))] = (h, sched, t)
+                    measured[(h.name, variant_key(sched, fuse))] = (
+                        h, sched, fuse, t)
         else:
             measured = self._sweep(pool, binding, ctx, mode, operands)
         if not measured:
-            return None, {}, {}, {}, {}
+            return None, {}, {}, {}, {}, {}, {}
         timings: Dict[str, float] = {}
         schedules: Dict[str, Optional[Dict]] = {}
+        fuses: Dict[str, Optional[bool]] = {}
         variant_s: Dict[str, Dict[str, float]] = {}
+        variants: Dict[str, List[Tuple[Optional[Dict],
+                                       Optional[bool], float]]] = {}
         marshal_s: Dict[str, float] = {}
-        for (name, skey), (h, sched, t) in measured.items():
-            variant_s.setdefault(name, {})[skey] = t
+        for (name, vkey), (h, sched, fuse, t) in measured.items():
+            variant_s.setdefault(name, {})[vkey] = t
+            variants.setdefault(name, []).append((sched, fuse, t))
             if name not in timings or t < timings[name]:
                 timings[name] = t
                 schedules[name] = sched
+                fuses[name] = fuse
         if mode != "trace":
-            by_name = {h.name: h for h, _ in pool}
+            by_name = {h.name: h for h, _, _ in pool}
             for name in timings:
                 marshal_s[name] = self._marshal_cost(by_name[name], ctx)
         amort = self.amortized(timings, marshal_s, self._reuse(ctx))
         winner = min(amort, key=amort.get)
-        return winner, timings, marshal_s, schedules, variant_s
+        return winner, timings, marshal_s, schedules, variant_s, fuses, variants
 
     # -- selection -----------------------------------------------------------
 
@@ -749,6 +864,12 @@ class Autotuner:
                            epilogue=getattr(ctx, "epilogue", None))
         any_marshal = any(getattr(h, "marshal", ()) for h in cands)
         any_schedules = any(getattr(h, "schedules", ()) for h in cands)
+        # the fused-epilogue dimension exists only at epilogue call sites
+        # with a fuse-capable candidate — elsewhere pre-schema-4 records
+        # stay servable verbatim (zero re-timing)
+        fuse_dim = (getattr(ctx, "epilogue", None) is not None
+                    and any(getattr(h, "fuse_epilogue", False)
+                            for h in cands))
         prior_name = None
 
         if not autotune_disabled():
@@ -767,12 +888,16 @@ class Autotuner:
                 # a sweep *prior* rather than being served
                 stale = stale or (any_schedules
                                   and not rec.get("schedule_swept"))
+                # a schema-3 (fuse-unswept) record at a site where the
+                # fused-vs-unfused choice exists: the per-variant argmin
+                # can differ, so demote to a sweep prior
+                stale = stale or (fuse_dim and not rec.get("fuse_swept"))
                 # a pinned schedule that no longer exists in the winner's
                 # declared variant family (tune space changed) is stale too
                 if not stale and rec.get("schedule") is not None:
                     fam = getattr(by_name[rec["harness"]], "schedules", ())
                     stale = rec["schedule"] not in fam
-                name = schedule = None
+                name = schedule = fuse = None
                 if not stale:
                     # the record stores the raw kernel + marshal
                     # measurements, so a DIFFERENT declared call frequency
@@ -790,6 +915,8 @@ class Autotuner:
                             name = min(amort, key=amort.get)
                     schedule = (rec.get("schedule") if name == rec["harness"]
                                 else (rec.get("schedules") or {}).get(name))
+                    fuse = (rec.get("fuse") if name == rec["harness"]
+                            else (rec.get("fuses") or {}).get(name))
                     # the same family check as above, but for the
                     # re-derived winner: a stored schedule from a since-
                     # changed tune space must never be pinned
@@ -810,8 +937,11 @@ class Autotuner:
                         self.stats.disk_hits += 1
                     if hasattr(ctx, "schedule"):
                         ctx.schedule = schedule
+                    if hasattr(ctx, "fuse"):
+                        ctx.fuse = fuse
                     self.last_decision = Decision(name, src, sig,
-                                                  schedule=schedule)
+                                                  schedule=schedule,
+                                                  fuse=fuse)
                     return by_name[name]
 
         if autotune_disabled() or self._budget() <= 0:
@@ -821,7 +951,8 @@ class Autotuner:
             return None
 
         self.stats.misses += 1
-        winner, timings, marshal_s, schedules, variant_s = self.measure(
+        (winner, timings, marshal_s, schedules, variant_s, fuses,
+         variants) = self.measure(
             cands, binding, ctx, mode, default_name=default_name,
             prior_name=prior_name)
         if winner is None:
@@ -832,6 +963,7 @@ class Autotuner:
         reuse = self._reuse(ctx)
         amort = self.amortized(timings, marshal_s, reuse)
         win_schedule = schedules.get(winner)
+        win_fuse = fuses.get(winner)
         record = {"harness": winner,
                   "best_s": timings[winner],
                   "timings": timings,
@@ -842,16 +974,24 @@ class Autotuner:
                   "schedule": win_schedule,
                   "schedules": {n: s for n, s in schedules.items()
                                 if s is not None},
+                  "fuse": win_fuse,
+                  "fuses": {n: f for n, f in fuses.items()
+                            if f is not None},
                   "variant_s": variant_s,
+                  "variants": {n: [[s, f, t] for s, f, t in vs]
+                               for n, vs in variants.items()},
                   "schedule_swept": True,
+                  "fuse_swept": True,
                   "platform": platform,
                   "format": fmt}
         self.cache.put(sig, mode, record, persist=True)
         self.stats.stores += 1
         if hasattr(ctx, "schedule"):
             ctx.schedule = win_schedule
+        if hasattr(ctx, "fuse"):
+            ctx.fuse = win_fuse
         self.last_decision = Decision(winner, "measured", sig,
-                                      schedule=win_schedule)
+                                      schedule=win_schedule, fuse=win_fuse)
         return by_name[winner]
 
     def record_external(self, comp: str, fmt: str, platform: str, mode: str,
@@ -861,7 +1001,9 @@ class Autotuner:
                         reuse: float = 100.0,
                         schedules: Optional[Dict[str, Dict]] = None,
                         variant_s: Optional[Dict[str, Dict[str, float]]] = None,
-                        epilogue: Optional[str] = None) -> str:
+                        epilogue: Optional[str] = None,
+                        fuses: Optional[Dict[str, Optional[bool]]] = None,
+                        ) -> str:
         """Seed the persistent cache from externally measured timings
         (e.g. a benchmark sweep acting as the tuner).  ``marshal_s`` (per
         candidate conversion-path seconds) makes the recorded winner the
@@ -869,8 +1011,9 @@ class Autotuner:
         it the record is kernel-only.  ``schedules`` (per-harness best
         variant) and ``variant_s`` (per-variant seconds) mark the record
         schedule-swept; without them it is a kernel-level prior that gets
-        re-swept when a variant-declaring candidate appears.  Returns the
-        winner."""
+        re-swept when a variant-declaring candidate appears.  ``fuses``
+        (per-harness best fused-epilogue realization) likewise marks the
+        record fuse-swept.  Returns the winner."""
         if not timings:
             raise ValueError("record_external needs at least one timing")
         sig = signature_of(comp, fmt, platform, binding, epilogue=epilogue)
@@ -879,6 +1022,8 @@ class Autotuner:
         winner = min(amort, key=amort.get)
         swept = schedules is not None or variant_s is not None
         schedules = dict(schedules or {})
+        fuse_swept = fuses is not None or epilogue is None
+        fuses = dict(fuses or {})
         self.cache.put(sig, mode, {"harness": winner,
                                    "best_s": timings[winner],
                                    "timings": dict(timings),
@@ -889,8 +1034,13 @@ class Autotuner:
                                                   else "kernel_only"),
                                    "schedule": schedules.get(winner),
                                    "schedules": schedules,
+                                   "fuse": fuses.get(winner),
+                                   "fuses": {n: f for n, f in fuses.items()
+                                             if f is not None},
                                    "variant_s": dict(variant_s or {}),
+                                   "variants": {},
                                    "schedule_swept": swept,
+                                   "fuse_swept": fuse_swept,
                                    "platform": platform,
                                    "format": fmt}, persist=True)
         self.stats.stores += 1

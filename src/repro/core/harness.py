@@ -67,6 +67,13 @@ class CallCtx:
     # ``fuse epilogue`` apply it in-kernel (reading ``binding['bias']``
     # when present); for all others the rewriter applies it after the call.
     epilogue: Optional[str] = None
+    # Fusion decision for this call: None = the harness's declared default
+    # (fuse iff it declares ``fuse epilogue``); False pins the UNFUSED
+    # realization of a fuse-capable harness (the epilogue is applied at the
+    # jnp level after the call instead of in-kernel).  Swept as a variant
+    # dimension by the autotuner and pinned by the joint plan search —
+    # fusion is only applied where it measured faster (plan_search.py).
+    fuse: Optional[bool] = None
 
 
 @dataclasses.dataclass

@@ -129,6 +129,16 @@ def nbytes_of(x) -> int:
     return int(np.prod(shape)) * itemsize if len(shape) else itemsize
 
 
+def tree_nbytes(val) -> int:
+    """``nbytes_of`` summed over a container of arrays (marshaled values
+    are often tuples of buffers — ELL/BCSR packs)."""
+    if isinstance(val, (tuple, list)):
+        return sum(tree_nbytes(v) for v in val)
+    if isinstance(val, dict):
+        return sum(tree_nbytes(v) for v in val.values())
+    return nbytes_of(val)
+
+
 # ---------------------------------------------------------------------------
 # Format registry
 # ---------------------------------------------------------------------------
@@ -276,6 +286,20 @@ class ConversionGraph:
         plan = self.plan({src_fmt: entry_cost}, dst)
         return None if plan is None else plan[2]
 
+    def plan_cost(self, start_states: Dict[str, float], target: str
+                  ) -> Optional[Tuple[float, Tuple[str, ...]]]:
+        """Side-effect-free path costing for the joint plan optimizer
+        (``repro.core.plan_search``): cheapest cost from any start format
+        (each carrying its entry cost — 0.0 for an intermediate another
+        assignment already builds) to ``target``, plus the formats the
+        winning path would materialize along the way.  No edges run, no
+        EWMAs update — this is the cost ORACLE, not the executor."""
+        plan = self.plan(dict(start_states), target)
+        if plan is None:
+            return None
+        start, path, cost = plan
+        return cost, (start,) + tuple(e.dst for e in path)
+
 
 GRAPH = ConversionGraph()
 
@@ -402,6 +426,11 @@ class PlanStats:
     build_seconds: float = 0.0
     last_path: Tuple[str, ...] = ()
     shared_prefix_hits: int = 0
+    # joint-search observability: how often (and how many bytes' worth) a
+    # planned path entered at an intermediate another plan already built —
+    # the cost-0 sharing assumption plan_search's model relies on
+    rides: int = 0
+    shared_prefix_bytes: int = 0
 
     def as_dict(self) -> Dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -617,6 +646,8 @@ class DataPlane(MarshalingCache):
             self._store.move_to_end(cached_vals[start_fmt])
             self.stats.shared_edge_hits += 1
             ps.shared_prefix_hits += 1
+            ps.rides += 1
+            ps.shared_prefix_bytes += tree_nbytes(val)
         else:
             val, dt = loader.run(binding)
             paid += dt

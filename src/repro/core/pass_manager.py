@@ -41,6 +41,7 @@ import jax
 from repro.core import detect as D
 from repro.core import harness as H
 from repro.core import plan as P
+from repro.core import plan_search as PS
 from repro.core.autotune import autotune_disabled
 from repro.core.marshal import (DataPlane, MarshalingCache, MarshalPolicy,
                                 TrackedArray)
@@ -52,11 +53,13 @@ class CompiledEntry:
     closed_jaxpr: Any
     report: D.DetectionReport
     out_tree: Any
-    # autotune pins: match index -> (harness name, schedule variant),
-    # filled at first lowering for this signature so later calls (and
-    # re-traces under jit) reuse the measured winner — including its swept
-    # kernel schedule — without consulting the tuner again.
-    pins: Dict[int, Tuple[str, Optional[Dict[str, Any]]]] = \
+    # autotune pins: match index -> (harness name, schedule variant, fuse
+    # realization), filled at first lowering for this signature so later
+    # calls (and re-traces under jit) reuse the measured winner — including
+    # its swept kernel schedule and epilogue-fusion decision — without
+    # consulting the tuner again.  After the joint plan search runs, these
+    # hold the jointly-optimal assignment, not the per-match argmins.
+    pins: Dict[int, Tuple[str, Optional[Dict[str, Any]], Optional[bool]]] = \
         dataclasses.field(default_factory=dict)
     # id(anchor eqn) -> match index, built once at entry construction (the
     # pinned-select path used to rebuild it per call)
@@ -70,6 +73,13 @@ class CompiledEntry:
     no_bake: bool = False
     bake_error: Optional[str] = None
     rebakes: int = 0
+    # joint whole-program plan search (repro.core.plan_search): the report
+    # of the last search and whether the search has run (or been skipped)
+    # for this entry.  Entries rehydrated from the plan cache with complete
+    # pins start done: the persisted pins already ARE the joint assignment,
+    # so warm processes serve it with zero re-search.
+    joint: Optional[Dict[str, Any]] = None
+    joint_done: bool = False
     # memoized liveness (rewrite.needed_eqn_ids) for the full match list
     # and for the enabled=False baseline
     _needed_full: Optional[frozenset] = None
@@ -192,6 +202,9 @@ class LilacFunction:
                 i, name, schedule = int(k), v[0], v[1]
             except (TypeError, ValueError, IndexError):
                 continue
+            # pre-joint-search records persisted [name, schedule] pairs;
+            # fuse=None keeps the harness's declared realization
+            fuse = v[2] if len(v) > 2 else None
             if not (0 <= i < len(flat)):
                 continue
             try:
@@ -200,7 +213,7 @@ class LilacFunction:
                 continue
             if schedule is not None and schedule not in (h.schedules or ()):
                 continue
-            pins[i] = (name, schedule)
+            pins[i] = (name, schedule, fuse)
         return pins
 
     def _build_entry(self, args, kwargs) -> CompiledEntry:
@@ -211,6 +224,7 @@ class LilacFunction:
         report = None
         pins: Dict[int, Tuple] = {}
         served = False
+        joint_rec = None
         pc = self._plan_cache
         if pc is not None and not self._plan_cache_injected \
                 and pc.registry_fingerprint != self.registry.fingerprint():
@@ -242,6 +256,7 @@ class LilacFunction:
                         log=["rehydrated from plan cache "
                              "(detection + tuning skipped)"])
                     pins = self._validated_pins(rec.get("pins"), got)
+                    joint_rec = rec.get("joint")
                     served = True
                 else:
                     pc.stats.rejected += 1
@@ -258,6 +273,13 @@ class LilacFunction:
         entry.persisted = served and (
             self.policy != "autotune" or not report.matches
             or len(pins) == len(report.matches))
+        # warm start: served pins with full coverage already carry the
+        # joint assignment from the process that searched it — serve with
+        # zero re-search (the acceptance property the benchmark gates)
+        if served and pins and len(pins) == len(
+                _flat_matches(report.matches)):
+            entry.joint_done = True
+            entry.joint = joint_rec
         return entry
 
     def _entry_for(self, args, kwargs, flat, in_tree) -> CompiledEntry:
@@ -319,11 +341,12 @@ class LilacFunction:
                 return self._select(m, binding, ctx)
             pin = entry.pins.get(i)
             if pin is not None:
-                name, schedule = pin
+                name, schedule, fuse = pin
                 try:
                     h = self.registry.get(m.computation, name)
                     if ctx is not None:
                         ctx.schedule = schedule
+                        ctx.fuse = fuse
                     return h
                 except KeyError:
                     del entry.pins[i]   # harness set changed; re-tune
@@ -430,20 +453,80 @@ class LilacFunction:
             sched = getattr(ctx, "schedule", None)
             schedules.append(sched)
             if recorder is not None:
-                recorder.begin(m, h, sched)
+                recorder.begin(m, h, sched, getattr(ctx, "fuse", None))
 
         outs = run_rewritten(
             entry.closed_jaxpr, matches, select, uflat, ctx_factory,
             on_select=on_select, needed=entry.needed_for(matches))
         self.last_selections = selections
         self.last_schedules = schedules
+        joint_moved = self._maybe_joint(entry)
         self._maybe_persist(entry)
-        if recorder is not None:
+        if recorder is not None and not joint_moved:
+            # pins just changed under the joint search: this call recorded
+            # the pre-joint assignment, so baking it would freeze the wrong
+            # plan — the next call records and bakes the joint one
             self._maybe_bake(entry, matches, recorder, raw_flat, uflat,
                              in_tree)
         return jax.tree_util.tree_unflatten(entry.out_tree, outs)
 
     # -- plan lifecycle ------------------------------------------------------
+
+    def _maybe_joint(self, entry: CompiledEntry) -> bool:
+        """Run the joint whole-program plan search once per entry, after
+        every match has a definitive per-match pin.  Returns True when the
+        search moved any pin (the caller then skips baking this call — the
+        recorded selections are the pre-joint ones).
+
+        The search is pure bookkeeping over the autotune cache's measured
+        components — zero re-timing — so it runs inline.  Entries served
+        from the plan cache with complete pins arrive ``joint_done`` (the
+        persisted pins are the previous process's joint assignment)."""
+        if entry.joint_done or self.policy != "autotune":
+            return False
+        matches = entry.report.matches if self.enabled else []
+        flat = _flat_matches(matches)
+        if len(flat) < 2:
+            # nothing to couple: the per-match winner (fuse dimension
+            # included, swept by the schema-4 autotuner) is already joint
+            entry.joint_done = True
+            return False
+        if len(entry.pins) != len(flat):
+            return False        # not yet resolved; retry next call
+        width = PS.beam_width()
+        if width <= 0:
+            entry.joint_done = True     # LILAC_SEARCH_BEAM=0: pure greedy
+            return False
+        tuner = getattr(self.registry, "autotuner", None)
+        if tuner is None:
+            entry.joint_done = True
+            return False
+        try:
+            res = PS.optimize_entry(
+                flat, entry.pins, registry=self.registry, tuner=tuner,
+                platform=self.platform, mode=self.mode, cache=self.cache,
+                reuse=self.marshal_policy.reuse, width=width)
+        except Exception:
+            entry.joint_done = True     # cost model unavailable: pins stand
+            return False
+        entry.joint_done = True
+        if res is None:
+            return False
+        entry.joint = res.report()
+        moved = False
+        for i, cand in enumerate(res.assignment):
+            pin = cand.pin()
+            if entry.pins.get(i) != pin:
+                entry.pins[i] = pin
+                moved = True
+        if moved:
+            entry.persisted = False     # re-persist the joint pins
+            if entry.plan is not None:  # baked on pre-joint pins: stale
+                if self._last_plan is entry.plan:
+                    self._last_plan = None
+                self._drop_hot(entry.plan)
+                entry.plan = None
+        return moved
 
     def _resolved(self, entry: CompiledEntry, matches) -> bool:
         """A rewrite is resolved once every selection is definitive: always
@@ -474,12 +557,16 @@ class LilacFunction:
             entry.persisted = True      # unaddressable match: don't retry
             return
         entry.persisted = True
-        pc.put(entry.cache_key, {
+        rec = {
             "matches": ser,
             "n_eqns": len(entry.closed_jaxpr.jaxpr.eqns),
             "detect_digest": P.detect_digest(ser),
-            "pins": {str(i): [n, s] for i, (n, s) in entry.pins.items()},
-        })
+            "pins": {str(i): [n, s, f]
+                     for i, (n, s, f) in entry.pins.items()},
+        }
+        if entry.joint is not None:
+            rec["joint"] = entry.joint
+        pc.put(entry.cache_key, rec)
 
     def _disable_bake(self, entry: CompiledEntry, reason: str):
         """Stop baking this entry AND drop any existing plan: a retired
@@ -675,6 +762,9 @@ class LilacFunction:
             "rebakes": sum(e.rebakes for e in entries),
             "no_bake": sum(1 for e in entries if e.no_bake),
             "bake_errors": [e.bake_error for e in entries if e.bake_error],
+            "joint_searched": sum(1 for e in entries
+                                  if e.joint is not None),
+            "joint": [e.joint for e in entries if e.joint is not None],
             "plan_cache": (str(self._plan_cache.path)
                            if self._plan_cache is not None else None),
             "plan_cache_stats": (self._plan_cache.stats.as_dict()

@@ -349,18 +349,20 @@ class PlanCache(JsonStore):
 
 class _Slot:
     """What one match contributed during the recorded call."""
-    __slots__ = ("harness", "schedule", "buffers")
+    __slots__ = ("harness", "schedule", "fuse", "buffers")
 
     def __init__(self):
         self.harness = None
         self.schedule = None
+        self.fuse = None
         self.buffers: List[Any] = []
 
 
 class PlanRecorder:
     """Observes one interpreted call: per match, the finally selected
-    harness, its schedule, and the marshaled values its clauses produced
-    (in clause order) — everything baking needs."""
+    harness, its schedule variant (schedule + epilogue-fusion decision),
+    and the marshaled values its clauses produced (in clause order) —
+    everything baking needs."""
 
     def __init__(self):
         self.slots: Dict[int, _Slot] = {}
@@ -368,7 +370,7 @@ class PlanRecorder:
     def slot(self, m) -> _Slot:
         return self.slots.setdefault(id(m.anchor_eqn), _Slot())
 
-    def begin(self, m, harness, schedule):
+    def begin(self, m, harness, schedule, fuse=None):
         """Called by ``on_select`` AFTER selection: autotune measurement
         may have routed candidate repacks through the recording cache, so
         the buffer list restarts here — only the winner's final execution
@@ -376,6 +378,7 @@ class PlanRecorder:
         s = self.slot(m)
         s.harness = harness
         s.schedule = schedule
+        s.fuse = fuse
         s.buffers.clear()
 
     def complete_for(self, matches) -> bool:
@@ -593,7 +596,7 @@ class ExecutablePlan:
     def __init__(self, jitted, in_tree, out_tree, avals, guards,
                  report, selections, schedules, hoisted, enabled: bool,
                  const_guards=(), registry_epoch: int = 0,
-                 trace_servable: bool = False):
+                 trace_servable: bool = False, fuses=None):
         # registry epoch at bake time: the pass manager refuses to serve
         # (or guard-refresh) this plan once any harness (re-)registration
         # has moved the registry on — a replaced kernel body must never
@@ -610,6 +613,9 @@ class ExecutablePlan:
         self.report = report                 # the entry's DetectionReport
         self.selections = selections         # [(Match, harness name)]
         self.schedules = schedules           # aligned schedule variants
+        # aligned epilogue-fusion decisions (None = declared default)
+        self.fuses = list(fuses) if fuses is not None \
+            else [None] * len(selections)
         self.hoisted = hoisted               # {anchor id: (buffers...)}
         self.enabled = enabled
         # True when every selected harness composes with transform traces
@@ -699,6 +705,7 @@ class ExecutablePlan:
             "array_leaves": [[list(s[1]), str(s[2])] for s in arr],
             "selections": [name for _, name in self.selections],
             "schedules": [s for s in self.schedules],
+            "fuses": [f for f in self.fuses],
             "guards": len(self.guards),
             "const_guards": len(self.const_guards),
             "hoisted_nbytes": self.hoisted_nbytes(),
@@ -747,13 +754,15 @@ def bake_plan(*, closed_jaxpr, matches, needed, recorder: PlanRecorder,
         s = slots[id(m.anchor_eqn)]
         if ctx is not None:
             ctx.schedule = s.schedule
+            ctx.fuse = s.fuse
         return s.harness
 
     def ctx_factory(m):
         s = slots[id(m.anchor_eqn)]
         return CallCtx(mode=mode, cache=_PlanBuffers(s.buffers),
                        format=m.format, platform=platform,
-                       schedule=s.schedule, epilogue=m.epilogue)
+                       schedule=s.schedule, epilogue=m.epilogue,
+                       fuse=s.fuse)
 
     def baked(*leaves):
         return run_rewritten(closed_jaxpr, matches, select, list(leaves),
@@ -806,6 +815,7 @@ def bake_plan(*, closed_jaxpr, matches, needed, recorder: PlanRecorder,
     const_guards = [_Guard(-1, c, exact=True) for c in writable]
     selections = [(m, slots[id(m.anchor_eqn)].harness.name) for m in matches]
     schedules = [slots[id(m.anchor_eqn)].schedule for m in matches]
+    fuses = [slots[id(m.anchor_eqn)].fuse for m in matches]
     hoisted = {aid: tuple(s.buffers) for aid, s in slots.items()}
     trace_servable = all(
         s.harness.jit_safe or getattr(s.harness, "vjp", None) is not None
@@ -814,4 +824,4 @@ def bake_plan(*, closed_jaxpr, matches, needed, recorder: PlanRecorder,
                           guards, report, selections, schedules, hoisted,
                           enabled, const_guards=const_guards,
                           registry_epoch=registry_epoch,
-                          trace_servable=trace_servable)
+                          trace_servable=trace_servable, fuses=fuses)

@@ -132,6 +132,18 @@ def apply_epilogue(out, bias, epilogue: str):
     return out
 
 
+def effective_fuse(harness, ctx) -> bool:
+    """Whether this call applies the detected epilogue IN-KERNEL.  The
+    harness must be fuse-capable (``fuse epilogue`` in its spec); given
+    that, ``ctx.fuse`` overrides the declared default — the autotuner
+    sweeps both realizations and the joint plan search pins the faster
+    one, so fusion is a measured decision, not a flag."""
+    if not getattr(harness, "fuse_epilogue", False):
+        return False
+    f = getattr(ctx, "fuse", None)
+    return True if f is None else bool(f)
+
+
 def _call_with_vjp(harness: Harness, binding_vals: Dict[str, Any],
                    ctx: CallCtx):
     """Wrap the harness call in ``jax.custom_vjp`` per its declared vjp
@@ -200,9 +212,15 @@ def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory,
         if m.epilogue is not None:
             out = apply_epilogue(out, binding_vals.get("bias"), m.epilogue)
     else:
+        fused = effective_fuse(harness, ctx)
+        if (m.epilogue is not None and not fused
+                and getattr(harness, "fuse_epilogue", False)
+                and ctx.epilogue is not None):
+            # fuse-capable harness pinned UNFUSED: the body must not see
+            # the epilogue (it would apply it in-kernel)
+            ctx = dataclasses.replace(ctx, epilogue=None)
         out = harness(binding_vals, ctx)
-        if m.epilogue is not None and not getattr(harness, "fuse_epilogue",
-                                                  False):
+        if m.epilogue is not None and not fused:
             out = apply_epilogue(out, binding_vals.get("bias"), m.epilogue)
     if m.variant == "loop":
         # scan anchor: outvars = (final counter, final accumulator)

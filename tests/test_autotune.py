@@ -261,9 +261,10 @@ def test_trace_mode_winner_pinning_determinism():
                                rtol=1e-3)
     winner = opt.last_selections[0][1]
     entry = next(iter(opt._compiled.values()))
-    # pinned into the rewrite as a (harness, schedule) pair; the jnp.*
-    # winners declare no tune space, so the schedule half is None
-    assert entry.pins == {0: (winner, None)}
+    # pinned into the rewrite as a (harness, schedule, fuse) triple; the
+    # jnp.* winners declare no tune space and the site has no epilogue,
+    # so both variant dimensions are None
+    assert entry.pins == {0: (winner, None, None)}
 
     # repeat calls and re-traces reuse the pin: deterministic, no timing
     tuner = REGISTRY.autotuner

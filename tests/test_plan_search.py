@@ -1,0 +1,419 @@
+"""Joint whole-program plan search (repro.core.plan_search):
+
+  * a two-match coupled program where the jointly-optimal assignment
+    beats independent per-match winners (the shared-repack flip)
+  * beam width 1 is exactly the sequential greedy baseline
+  * property: the search never returns an assignment costlier than
+    greedy's (hypothesis-tested over random cost tables)
+  * end-to-end: the pass manager's joint pass flips per-match pins on a
+    rigged timer, re-persists them, and a warm plan-cache process serves
+    the joint assignment with ZERO re-search
+  * schema 3 -> 4 migration: old records serve verbatim at non-epilogue
+    sites (zero re-timing) and demote to sweep priors only where the new
+    fuse dimension actually exists
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import lilac
+from repro.core import plan_search as PS
+from repro.core.autotune import Autotuner, AutotuneCache, signature_of
+from repro.core.harness import CallCtx, HarnessRegistry
+from repro.core.marshal import MarshalPolicy, MarshalingCache
+from repro.core.plan_search import (Candidate, MarshalReq,
+                                    cost_of_assignment, greedy_assignment,
+                                    independent_assignment, search)
+from repro.core.spec import register_spec
+from repro.sparse import csr_from_dense
+from repro.sparse.random import random_dense_sparse
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # pragma: no cover - baked into the CI image
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# pure search: rigged cost tables
+# ---------------------------------------------------------------------------
+
+class _StubGraph:
+    """Exact-hit-only conversion graph: a format already built rides free,
+    anything else pays the measured full path."""
+
+    def plan_cost(self, starts, dst):
+        if dst in starts:
+            return starts[dst], (dst,)
+        return None
+
+
+# kernel seconds: 'seg' marshal-free, 'ell' faster kernel + one repack.
+# With reuse=30 and repack M=0.03: per-match amortized ell = 1e-3 +
+# 0.03/30 = 2e-3 > seg's 1.8e-3, so greedy picks seg at every match —
+# but two matches SHARING the repack cost 2e-3 + 1e-3 = 3e-3 jointly
+# versus 3.6e-3 for seg/seg.  (Flip window: M/(2*delta) < reuse <
+# M/delta with delta = 0.8e-3, i.e. 18.75 < 30 < 37.5.)
+_REQ = MarshalReq(matrix="A", src="csr_binding", dst="ELL8", full_s=0.03)
+
+
+def _coupled_table():
+    return [Candidate("seg", 1.8e-3),
+            Candidate("ell", 1.0e-3, reqs=(_REQ,))]
+
+
+def test_joint_beats_independent_on_coupled_program():
+    tables = [_coupled_table(), _coupled_table()]
+    res = search(tables, graph=_StubGraph(), sources={}, reuse=30.0, width=8)
+    assert [c.harness for c in res.assignment] == ["ell", "ell"]
+    assert res.cost == pytest.approx(3.0e-3)
+    assert res.independent_cost == pytest.approx(3.6e-3)
+    assert res.joint_vs_independent > 1.0
+    # the sharing-blind baseline picks ell at both sites too (each pays
+    # its own repack), and its reported cost is the assignment's true
+    # shared-plane cost — the same arithmetic search() minimizes
+    ind = independent_assignment(tables, _StubGraph(), {}, 30.0)
+    assert ind[1] == pytest.approx(res.independent_cost)
+    assert ind[1] == pytest.approx(
+        cost_of_assignment(ind[0], _StubGraph(), {}, 30.0))
+    # the frontier surfaces the runner-up states for plan_info()
+    assert res.frontier and res.frontier[0]["cost_s"] == pytest.approx(res.cost)
+
+
+def test_single_match_search_is_the_per_match_winner():
+    tables = [_coupled_table()]
+    res = search(tables, graph=_StubGraph(), sources={}, reuse=30.0, width=8)
+    # one match cannot share anything: amortized argmin = seg
+    assert [c.harness for c in res.assignment] == ["seg"]
+    assert res.cost == res.greedy_cost == res.independent_cost
+
+
+def test_beam_width_one_equals_greedy():
+    tables = [_coupled_table(), _coupled_table(), _coupled_table()]
+    g_picks, g_cost = greedy_assignment(tables, _StubGraph(), {}, 30.0)
+    res = search(tables, graph=_StubGraph(), sources={}, reuse=30.0, width=1)
+    # width 1 explores exactly the greedy chain; the never-worse clamp can
+    # only substitute a baseline, so cost matches greedy (or independent
+    # when that happens to be cheaper — not here)
+    assert res.cost == pytest.approx(min(g_cost, res.independent_cost))
+    assert res.beam_width == 1
+
+
+def test_prior_ranks_first_and_wins_ties():
+    # identical costs: the stable sort must keep the prior (table head)
+    tables = [[Candidate("prior", 1e-3), Candidate("other", 1e-3)]]
+    res = search(tables, reuse=1.0, width=4)
+    assert res.assignment[0].harness == "prior"
+
+
+def test_beam_width_env(monkeypatch):
+    monkeypatch.setenv(PS.ENV_BEAM, "3")
+    assert PS.beam_width() == 3
+    monkeypatch.setenv(PS.ENV_BEAM, "junk")
+    assert PS.beam_width() == PS.DEFAULT_BEAM
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _tables(draw):
+        n_matches = draw(st.integers(1, 4))
+        fmts = ["F1", "F2"]
+        tables = []
+        for _ in range(n_matches):
+            n_c = draw(st.integers(1, 4))
+            cands = []
+            for j in range(n_c):
+                kernel = draw(st.floats(1e-5, 1e-2, allow_nan=False))
+                reqs = ()
+                if draw(st.booleans()):
+                    full = draw(st.floats(0.0, 0.1, allow_nan=False))
+                    fmt = fmts[draw(st.integers(0, 1))]
+                    reqs = (MarshalReq("M", "src", fmt, full_s=full),)
+                cands.append(Candidate(f"h{j}", kernel, reqs=reqs))
+            tables.append(cands)
+        return tables
+
+    @settings(max_examples=60, deadline=None)
+    @given(tables=_tables(), reuse=st.floats(1.0, 200.0),
+           width=st.integers(1, 6))
+    def test_search_never_costlier_than_greedy(tables, reuse, width):
+        g = _StubGraph()
+        _, g_cost = greedy_assignment(tables, g, {}, reuse)
+        res = search(tables, graph=g, sources={}, reuse=reuse, width=width)
+        assert res.cost <= g_cost + 1e-12
+        assert res.cost <= res.independent_cost + 1e-12
+        # the reported cost is reproducible from the assignment itself
+        assert res.cost == pytest.approx(
+            cost_of_assignment(res.assignment, g, {}, reuse))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the pass manager's joint pass on a rigged timer
+# ---------------------------------------------------------------------------
+
+def _seg_body(b, ctx):
+    row = jnp.repeat(jnp.arange(b["rows"], dtype=jnp.int32),
+                     jnp.diff(b["rowstr"]), total_repeat_length=b["nnz"])
+    return jax.ops.segment_sum(b["a"] * b["iv"][b["colidx"]], row,
+                               num_segments=b["rows"])
+
+
+def _ell_body(b, ctx, *, ell=None):
+    # the marshaled ELL8 pack arrives as the ``ell`` kwarg; numerics here
+    # reuse the CSR arrays (identical result) — the repack cost and its
+    # sharing across matches is what's under test
+    return _seg_body(b, ctx)
+
+
+def _coupled_registry():
+    reg = HarnessRegistry()
+    register_spec("""
+HARNESS toy.seg implements spmv_csr
+  formats CSR;
+""", {"toy.seg": _seg_body}, registry=reg)
+    register_spec("""
+HARNESS toy.ell implements spmv_csr
+  formats CSR;
+  marshal ell = ell_pack(a, colidx, rowstr|rowidx) from csr_binding to ELL8;
+""", {"toy.ell": _ell_body}, registry=reg)
+    reg._defaults[("spmv_csr", jax.default_backend())] = "toy.seg"
+    return reg
+
+
+def _rig(monkeypatch, kernel_s, marshal_s):
+    """Deterministic timer + marshal estimate, keyed by harness name."""
+    def fake_time(self, h, binding, ctx, mode, operands, schedule, reps):
+        return kernel_s[h.name]
+
+    monkeypatch.setattr(Autotuner, "_time_variant", fake_time)
+    monkeypatch.setattr(
+        Autotuner, "_marshal_cost",
+        staticmethod(lambda h, ctx: marshal_s.get(h.name, 0.0)))
+
+
+def _coupled_problem(n=64):
+    csr = csr_from_dense(random_dense_sparse(n, n, 0.2, 0))
+    vec = jnp.asarray(np.random.default_rng(1)
+                      .standard_normal(n).astype(np.float32))
+
+    def naive(val, col, row_ptr, v):
+        def spmv(x):
+            row = jnp.repeat(jnp.arange(n, dtype=jnp.int32),
+                             jnp.diff(row_ptr),
+                             total_repeat_length=csr.nnz)
+            return jax.ops.segment_sum(val * x[col], row, num_segments=n)
+        return spmv(spmv(v))            # A @ (A @ v): two coupled matches
+
+    return csr, vec, naive
+
+
+def test_joint_pass_flips_coupled_pins(monkeypatch, tmp_path):
+    """Two spmv matches on the SAME matrix: greedy pins the marshal-free
+    backend twice; the joint pass flips both to the faster kernel sharing
+    one repack, drops nothing, and re-persists the joint pins."""
+    reg = _coupled_registry()
+    _rig(monkeypatch, {"toy.seg": 1.8e-3, "toy.ell": 1.0e-3},
+         {"toy.ell": 0.03})
+    csr, vec, naive = _coupled_problem()
+    acc = lilac.compile(naive, mode="host", policy="autotune", registry=reg,
+                        marshal_policy=MarshalPolicy(reuse=30.0))
+    out = acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    ref = naive(csr.val, csr.col_ind, csr.row_ptr, vec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3,
+                               rtol=1e-3)
+    entry = next(iter(acc._compiled.values()))
+    assert len(entry.report.matches) == 2
+    # the first call tuned per-match: greedy winners ran...
+    assert [n for _, n in acc.last_selections] == ["toy.seg", "toy.seg"]
+    # ...then the joint pass flipped the pins and reported the win
+    assert entry.joint_done
+    assert entry.pins == {0: ("toy.ell", None, None),
+                          1: ("toy.ell", None, None)}
+    assert entry.joint["joint_vs_independent"] > 1.0
+    assert entry.joint["cost_s"] < entry.joint["independent_cost_s"]
+
+    # second call serves the joint assignment; the shared repack rides
+    out2 = acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref),
+                               atol=2e-3, rtol=1e-3)
+    assert [n for _, n in acc.last_selections] == ["toy.ell", "toy.ell"]
+    # same (matrix, src, dst) for both matches: the second is an exact
+    # cache hit — the cost-0 sharing the joint search priced in
+    stats = acc.cache.plan_stats()
+    assert sum(s["hits"] for s in stats.values()) >= 1
+
+
+def test_plan_stats_ride_counters():
+    """A partial-prefix ride (another entry's cached intermediate entering
+    the path at cost 0) is counted per plan entry: ``rides`` and the bytes
+    of intermediate it avoided rebuilding (``shared_prefix_bytes``)."""
+    from repro.core.marshal import DataPlane
+
+    csr = csr_from_dense(random_dense_sparse(32, 32, 0.3, 0))
+    binding = {"a": np.asarray(csr.val), "colidx": np.asarray(csr.col_ind),
+               "rowstr": np.asarray(csr.row_ptr),
+               "iv": np.ones(32, np.float32),
+               "rows": csr.rows, "nnz": csr.nnz}
+    keys = (binding["a"], binding["colidx"], binding["rowstr"])
+    dp = DataPlane()
+    dp.ensure("csr_binding", "DENSE", keys, binding)
+    # BCSR8x128 routes CSR -> DENSE -> BCSR8x128: the cached DENSE is a
+    # strict prefix, so this ensure RIDES it and only runs the last edge
+    dp.ensure("csr_binding", "BCSR8x128", keys, binding)
+    stats = dp.plan_stats()
+    ride_entry = stats["csr_binding->BCSR8x128"]
+    assert ride_entry["rides"] == 1
+    assert ride_entry["shared_prefix_bytes"] > 0
+    assert dp.stats.loader_runs == 1    # the binding was loaded ONCE
+
+
+def test_joint_disabled_by_beam_zero(monkeypatch):
+    monkeypatch.setenv(PS.ENV_BEAM, "0")
+    reg = _coupled_registry()
+    _rig(monkeypatch, {"toy.seg": 1.8e-3, "toy.ell": 1.0e-3},
+         {"toy.ell": 0.03})
+    csr, vec, naive = _coupled_problem()
+    acc = lilac.compile(naive, mode="host", policy="autotune", registry=reg,
+                        marshal_policy=MarshalPolicy(reuse=30.0))
+    acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    entry = next(iter(acc._compiled.values()))
+    # pure per-match greedy: pins stand, search skipped but marked done
+    assert entry.joint_done and entry.joint is None
+    assert entry.pins == {0: ("toy.seg", None, None),
+                          1: ("toy.seg", None, None)}
+
+
+def test_warm_plan_cache_serves_joint_pins_with_zero_research(
+        monkeypatch, tmp_path):
+    """A second LilacFunction over the same jaxpr rehydrates the JOINT
+    pins from the plan cache and never re-runs the search (the acceptance
+    property: warm processes pay nothing for joint optimality)."""
+    reg = _coupled_registry()
+    _rig(monkeypatch, {"toy.seg": 1.8e-3, "toy.ell": 1.0e-3},
+         {"toy.ell": 0.03})
+    csr, vec, naive = _coupled_problem()
+    pc = str(tmp_path / "joint_plans.json")
+    acc = lilac.compile(naive, mode="host", policy="autotune", registry=reg,
+                        marshal_policy=MarshalPolicy(reuse=30.0),
+                        plan_cache=pc)
+    acc(csr.val, csr.col_ind, csr.row_ptr, vec)
+    entry = next(iter(acc._compiled.values()))
+    assert entry.pins[0][0] == "toy.ell"
+
+    def boom(*a, **k):          # any re-search in the warm path is a bug
+        raise AssertionError("joint search re-ran on a warm entry")
+
+    monkeypatch.setattr(PS, "optimize_entry", boom)
+    acc2 = lilac.compile(naive, mode="host", policy="autotune", registry=reg,
+                         marshal_policy=MarshalPolicy(reuse=30.0),
+                         plan_cache=pc)
+    out = acc2(csr.val, csr.col_ind, csr.row_ptr, vec)
+    ref = naive(csr.val, csr.col_ind, csr.row_ptr, vec)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-3,
+                               rtol=1e-3)
+    entry2 = next(iter(acc2._compiled.values()))
+    assert entry2.joint_done
+    assert entry2.pins == entry.pins
+    assert [n for _, n in acc2.last_selections] == ["toy.ell", "toy.ell"]
+    # the persisted joint report rides along for observability
+    assert entry2.joint is not None
+    assert entry2.joint["joint_vs_independent"] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# schema 3 -> 4 migration
+# ---------------------------------------------------------------------------
+
+def _v3_record(winner, timings):
+    return {"harness": winner, "best_s": timings[winner],
+            "timings": dict(timings), "marshal_s": {},
+            "amortized_s": dict(timings), "cost_model": "amortized",
+            "schedule": None, "schedules": {}, "variant_s": {},
+            "schedule_swept": True}
+
+
+def test_v3_migration_serves_verbatim_without_fuse_dimension(
+        tmp_path, monkeypatch):
+    """No epilogue at the site and/or no fuse-capable candidate: the
+    schema-3 winner is authoritative — served with zero re-timing."""
+    reg = HarnessRegistry()
+    for name in ("toy.a", "toy.b"):
+        register_spec(f"""
+HARNESS {name} implements spmv_csr
+  formats CSR;
+""", {name: lambda b, ctx: np.zeros(b["rows"], np.float32)}, registry=reg)
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    binding = {"a": np.ones(8, np.float32),
+               "colidx": np.zeros(8, np.int32),
+               "rowstr": np.linspace(0, 8, 9).astype(np.int32),
+               "iv": np.ones(8, np.float32), "rows": 8, "nnz": 8}
+    sig = signature_of("spmv_csr", "CSR", "cpu", binding)
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps({
+        "schema": 3, "registry": "fp", "entries": {
+            sig: {"host": _v3_record("toy.b",
+                                     {"toy.a": 2e-3, "toy.b": 1e-3})}}}))
+    cache = AutotuneCache(path, registry_fingerprint="fp")
+    tuner = Autotuner(registry_fingerprint="fp", cache=cache, budget=4)
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR")
+    w = tuner.select("spmv_csr", "CSR", "cpu", "host", cands, binding, ctx,
+                     default_name="toy.a")
+    assert w.name == "toy.b"
+    assert tuner.stats.timing_calls == 0
+    assert cache.stats.migrations == 1
+
+
+def test_v3_migration_demotes_to_prior_when_fuse_dimension_exists(
+        tmp_path, monkeypatch):
+    """Epilogue site + fuse-capable candidate: the unswept fuse dimension
+    makes the old winner a PRIOR — re-swept once, prior measured first."""
+    reg = HarnessRegistry()
+    register_spec("""
+HARNESS toy.fusing implements spmv_csr
+  formats CSR;
+  fuse epilogue;
+""", {"toy.fusing": lambda b, ctx: np.zeros(b["rows"], np.float32)},
+        registry=reg)
+    cands = reg.candidates("spmv_csr", "CSR", "cpu", "host")
+    binding = {"a": np.ones(8, np.float32),
+               "colidx": np.zeros(8, np.int32),
+               "rowstr": np.linspace(0, 8, 9).astype(np.int32),
+               "iv": np.ones(8, np.float32), "rows": 8, "nnz": 8,
+               "bias": np.zeros(8, np.float32)}
+    sig = signature_of("spmv_csr", "CSR", "cpu", binding, epilogue="relu")
+    path = tmp_path / "autotune.json"
+    path.write_text(json.dumps({
+        "schema": 3, "registry": "fp", "entries": {
+            sig: {"host": _v3_record("toy.fusing",
+                                     {"toy.fusing": 1e-3})}}}))
+    cache = AutotuneCache(path, registry_fingerprint="fp")
+    tuner = Autotuner(registry_fingerprint="fp", cache=cache, budget=4)
+
+    timed = []
+
+    def fake_time(self, h, binding, ctx, mode, operands, schedule, reps):
+        timed.append((h.name, getattr(ctx, "fuse", None)))
+        return 1e-3 if getattr(ctx, "fuse", None) else 2e-3
+
+    monkeypatch.setattr(Autotuner, "_time_variant", fake_time)
+    ctx = CallCtx(mode="host", cache=MarshalingCache(), format="CSR",
+                  epilogue="relu")
+    w = tuner.select("spmv_csr", "CSR", "cpu", "host", cands, binding, ctx,
+                     default_name="toy.fusing")
+    assert w.name == "toy.fusing"
+    assert timed, "fuse dimension must be re-swept"
+    # both realizations were measured; the fused one won and is recorded
+    assert {f for _, f in timed} == {True, False}
+    rec = cache.get(sig, "host")
+    assert rec["fuse_swept"] is True
+    assert rec["fuse"] is True
+    # second lookup: served, no further timing
+    timed.clear()
+    tuner.select("spmv_csr", "CSR", "cpu", "host", cands, binding, ctx,
+                 default_name="toy.fusing")
+    assert timed == []

@@ -268,7 +268,7 @@ def test_variant_pool_cap_keeps_defaults(monkeypatch):
     tuner = Autotuner(registry_fingerprint="fp", budget=8, max_variants=3)
     pool = tuner._variant_pool(cands)
     assert len(pool) == 3
-    assert pool[0] == (h, h.schedules[0])   # default survives the cap
+    assert pool[0] == (h, h.schedules[0], None)   # default survives the cap
 
 
 # ---------------------------------------------------------------------------
@@ -437,7 +437,7 @@ HARNESS toy.tuned implements spmv_csr
     assert acc.last_selections[0][1] == "toy.tuned"
     assert acc.last_schedules[0] == fast
     entry = next(iter(acc._compiled.values()))
-    assert entry.pins == {0: ("toy.tuned", fast)}
+    assert entry.pins == {0: ("toy.tuned", fast, None)}
     # repeat call rides the pin: same schedule, zero re-timing
     timed = reg.autotuner.stats.timing_calls
     acc(csr.val, csr.col_ind, csr.row_ptr, vec)
