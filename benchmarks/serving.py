@@ -55,9 +55,13 @@ def _full_policy() -> BucketPolicy:
 
 
 def _run_mode(model, params, policy, workload, mode: str) -> dict:
+    # admit_deadline_s routes admission through Scheduler.try_admit
+    # (bounded retry-with-backoff) instead of hard-rejecting on a full
+    # queue; the resilience counters land in the report below
     eng = Engine(model, params,
                  ServeConfig(buckets=policy, mode=mode,
-                             prefill_lengths=workload.prompt_grid))
+                             prefill_lengths=workload.prompt_grid,
+                             admit_deadline_s=0.05))
     pairs = workload.requests()
     reqs = [r for _, r in pairs]
     snap = eng.run(pairs)
@@ -74,6 +78,7 @@ def _run_mode(model, params, policy, workload, mode: str) -> dict:
         "bucket_misses": snap["buckets"]["misses"],
         "cache_resizes": snap["buckets"]["cache_resizes"],
         "finished": snap["requests"]["finished"],
+        "resilience": snap["resilience"],
     }
 
 

@@ -27,8 +27,12 @@ def main():
     args = ap.parse_args()
 
     grid = (4, 8, 12)            # prompt lengths -> prewarmed prefills
+    # admit_deadline_s: a full queue is retried with bounded backoff
+    # (Scheduler.try_admit) before rejecting; deadline_s evicts requests
+    # that overstay their latency budget instead of pinning a slot
     cfg = ServeConfig(buckets=BucketPolicy(batch=(1, 2, 4), seq=(32, 64)),
-                      mode=args.mode, prefill_lengths=grid)
+                      mode=args.mode, prefill_lengths=grid,
+                      admit_deadline_s=0.05, deadline_s=120.0)
     eng = build_engine(args.arch, smoke=True, config=cfg)
     pw = eng.metrics.prewarm
     print(f"prewarm: {pw['baked']}/{pw['n_signatures']} bucket plans baked "
@@ -46,6 +50,10 @@ def main():
           f"decode-step p50={snap['decode_step_s']['p50'] * 1e3:.2f} ms  "
           f"bucket hits/misses={snap['buckets']['hits']}"
           f"/{snap['buckets']['misses']}")
+    res = snap["resilience"]
+    print(f"resilience: decode_faults={res['decode_faults']} "
+          f"fault_evictions={res['fault_evictions']} "
+          f"admission_retries={res['admission_retries']}")
     first = pairs[0][1]
     print("first request tokens:", json.dumps(first.tokens[:10]))
 

@@ -230,6 +230,8 @@ class TuneStats:
     remeasures: int = 0        # stale records re-tuned (marshal/schedule)
     elimination_calls: int = 0  # cheap single-iteration sweep measurements
     save_errors: int = 0       # persistence failed (unwritable path)
+    corrupt_recoveries: int = 0  # torn cache file quarantined, fresh start
+    quarantine_skips: int = 0  # candidates/variants excluded by quarantine
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -305,6 +307,9 @@ class AutotuneCache(JsonStore):
 
     def _note_save_error(self):
         self.stats.save_errors += 1
+
+    def _note_corrupt_recovery(self):
+        self.stats.corrupt_recoveries += 1
 
     def _migrate(self, entries, schema):
         if schema == 1:
@@ -541,6 +546,8 @@ class Autotuner:
         self.max_variants = max_variants
         self.stats = TuneStats()
         self.last_decision: Optional[Decision] = None
+        #: injectable QuarantineStore; None -> the process-shared one
+        self.quarantine = None
 
     # -- cache plumbing ------------------------------------------------------
 
@@ -556,6 +563,12 @@ class Autotuner:
             self._cache = AutotuneCache(
                 want, registry_fingerprint=self.registry_fingerprint)
         return self._cache
+
+    def _quarantine_store(self):
+        if self.quarantine is not None:
+            return self.quarantine
+        from repro.core.resilience import shared_quarantine
+        return shared_quarantine()
 
     def _budget(self) -> int:
         return self.budget if self.budget is not None else exploration_budget()
@@ -644,6 +657,9 @@ class Autotuner:
         if hasattr(ctx, "schedule"):
             ctx.schedule = schedule
         try:
+            from repro.core import faults
+            if faults.ACTIVE is not None:
+                faults.fail("tune_raise", h.name)
             if mode == "trace":
                 return self._time_trace(h, ctx, operands, reps=reps)
             return self._time_host(h, binding, ctx, reps=reps)
@@ -698,13 +714,24 @@ class Autotuner:
         ``max_variants``.  Default variants (default schedule, fused)
         always survive the cap; the remainder fills round-robin so no
         harness monopolizes the budget."""
+        q = self._quarantine_store()
         families = []
         for h in ranked:
             scheds = list(getattr(h, "schedules", ()) or ()) or [None]
             fuses = ([True, False]
                      if epilogue is not None
                      and getattr(h, "fuse_epilogue", False) else [None])
-            families.append((h, [(s, f) for s in scheds for f in fuses]))
+            fam = [(s, f) for s in scheds for f in fuses]
+            if q is not None:
+                comp = getattr(h, "implements", "")
+                kept = [(s, f) for s, f in fam
+                        if not q.is_quarantined(comp, h.name,
+                                                variant_key(s, f))]
+                self.stats.quarantine_skips += len(fam) - len(kept)
+                if not kept:
+                    continue
+                fam = kept
+            families.append((h, fam))
         cap = max(len(families), self._max_variants())
         total = sum(len(f) for _, f in families)
         if total <= cap:
@@ -859,6 +886,14 @@ class Autotuner:
         """
         if not cands:
             return None
+        q = self._quarantine_store()
+        if q is not None:
+            live = [h for h in cands if not q.is_quarantined(comp, h.name)]
+            # all-quarantined keeps the full set: an answer is still owed,
+            # and call-time containment is the real enforcement boundary
+            if live and len(live) < len(cands):
+                self.stats.quarantine_skips += len(cands) - len(live)
+                cands = live
         by_name = {h.name: h for h in cands}
         sig = signature_of(comp, fmt, platform, binding,
                            epilogue=getattr(ctx, "epilogue", None))
@@ -897,6 +932,14 @@ class Autotuner:
                 if not stale and rec.get("schedule") is not None:
                     fam = getattr(by_name[rec["harness"]], "schedules", ())
                     stale = rec["schedule"] not in fam
+                # a quarantined (winner, variant): the record predates the
+                # incident, so its measurement no longer speaks for the
+                # candidate — demote to prior and re-measure (the sweep
+                # pool filters the quarantined variant out)
+                if not stale and q is not None and q.is_quarantined(
+                        comp, rec["harness"],
+                        variant_key(rec.get("schedule"), rec.get("fuse"))):
+                    stale = True
                 name = schedule = fuse = None
                 if not stale:
                     # the record stores the raw kernel + marshal

@@ -1,0 +1,240 @@
+"""Deterministic, site-addressable fault injection (the chaos harness).
+
+Every containment path in LiLAC — harness quarantine, reference fallback,
+torn-cache recovery, poisoned-request eviction — exists to keep an
+accelerated program *never worse* than the un-rewritten one.  This module
+is how those paths get exercised on demand: injection points threaded
+through kernel calls, marshal repacks, tune probes, bake, JsonStore I/O
+and serve decode steps fire according to a seed-driven plan, so a chaos
+run is exactly reproducible and a CI gate can rotate seeds.
+
+Fault classes (the ``kind`` namespace)::
+
+    kernel_raise      Harness.__call__ raises before the body runs
+    nan_output        a concrete harness output is poisoned with NaNs
+    marshal_raise     a data-plane repack / conversion raises
+    tune_raise        an autotune candidate measurement raises
+    bake_raise        plan baking raises (falls back to the interpreter)
+    cache_torn_write  a JsonStore save leaves a truncated file on disk
+    decode_raise      a serving decode step raises (poisons one slot)
+    decode_nan        one row of the decode logits becomes NaN
+
+Spec grammar (``LILAC_FAULTS``): comma-separated rules, each
+``kind[:site[:prob]]``.  ``site`` is an ``fnmatch`` pattern matched
+against the injection point's name (a harness name like ``pallas.ell``,
+a repack name, a cache file stem like ``autotune``, or ``decode``);
+omitted or ``*`` matches every site.  ``prob`` (default 1.0) is the
+per-attempt firing probability, decided by a stable hash of
+``(seed, kind, site, attempt#)`` — no RNG state, so two processes with
+the same plan and call sequence inject identically.
+
+    LILAC_FAULTS="kernel_raise:pallas.ell:0.5,nan_output:*,cache_torn_write"
+    LILAC_FAULTS_SEED=7
+
+Programmatic use (tests) is a context manager::
+
+    from repro.core import faults
+    with faults.inject("kernel_raise:jnp.segment", seed=3) as plan:
+        fast(*args)
+    assert plan.fired          # [(kind, site, attempt#), ...]
+
+When no plan is active every injection point is a module-global ``None``
+check — the steady-state dispatch path stays measurably free of chaos
+machinery (the ``containment_overhead_leq_2pct`` benchmark gate).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import fnmatch
+import hashlib
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+_ENV_SPEC = "LILAC_FAULTS"
+_ENV_SEED = "LILAC_FAULTS_SEED"
+
+#: every kind `parse_spec` accepts — a typo'd class is an error, not a
+#: silently dead rule
+KINDS = ("kernel_raise", "nan_output", "marshal_raise", "tune_raise",
+         "bake_raise", "cache_torn_write", "decode_raise", "decode_nan")
+
+
+class FaultSpecError(ValueError):
+    """Malformed ``LILAC_FAULTS`` rule (unknown kind / bad probability)."""
+
+
+class InjectedFault(RuntimeError):
+    """The exception raised by firing ``*_raise`` injection points.
+
+    ``slot`` is meaningful only for serving decode faults: the batch slot
+    the fault is attributed to, so the engine can evict exactly the
+    poisoned request.
+    """
+
+    def __init__(self, kind: str, site: str, slot: Optional[int] = None):
+        super().__init__(f"injected fault {kind} at {site!r}"
+                         + (f" (slot {slot})" if slot is not None else ""))
+        self.kind = kind
+        self.site = site
+        self.slot = slot
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRule:
+    kind: str
+    site: str = "*"           # fnmatch pattern over injection-point names
+    prob: float = 1.0
+
+
+def parse_spec(spec: str) -> List[FaultRule]:
+    """Parse a ``LILAC_FAULTS`` string into rules (see module docstring)."""
+    rules: List[FaultRule] = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        bits = part.split(":")
+        kind = bits[0].strip()
+        if kind not in KINDS:
+            raise FaultSpecError(
+                f"unknown fault kind {kind!r} (valid: {', '.join(KINDS)})")
+        site = bits[1].strip() if len(bits) > 1 and bits[1].strip() else "*"
+        prob = 1.0
+        if len(bits) > 2 and bits[2].strip():
+            try:
+                prob = float(bits[2])
+            except ValueError:
+                raise FaultSpecError(
+                    f"bad probability {bits[2]!r} in rule {part!r}") from None
+            if not (0.0 <= prob <= 1.0):
+                raise FaultSpecError(
+                    f"probability {prob} out of [0, 1] in rule {part!r}")
+        rules.append(FaultRule(kind, site, prob))
+    return rules
+
+
+class FaultPlan:
+    """An active set of rules plus the deterministic firing state.
+
+    ``fires`` is a pure function of ``(seed, kind, site, attempt#)``; the
+    per-``(kind, site)`` attempt counters are the only mutable state, so
+    re-running the same call sequence re-injects the same faults.
+    """
+
+    def __init__(self, rules: Sequence[FaultRule], seed: int = 0):
+        self.rules = list(rules)
+        self.seed = int(seed)
+        self._attempts: Dict[Tuple[str, str], int] = {}
+        #: chronological (kind, site, attempt#) log of every fired fault
+        self.fired: List[Tuple[str, str, int]] = []
+
+    def _rule_for(self, kind: str, site: str) -> Optional[FaultRule]:
+        for r in self.rules:
+            if r.kind == kind and fnmatch.fnmatchcase(site, r.site):
+                return r
+        return None
+
+    def attempts(self, kind: str, site: str) -> int:
+        return self._attempts.get((kind, site), 0)
+
+    def fires(self, kind: str, site: str) -> bool:
+        rule = self._rule_for(kind, site)
+        if rule is None:
+            return False
+        key = (kind, site)
+        n = self._attempts.get(key, 0)
+        self._attempts[key] = n + 1
+        if rule.prob >= 1.0:
+            hit = True
+        elif rule.prob <= 0.0:
+            hit = False
+        else:
+            h = hashlib.blake2b(f"{self.seed}|{kind}|{site}|{n}".encode(),
+                                digest_size=8).digest()
+            hit = int.from_bytes(h, "big") / 2.0 ** 64 < rule.prob
+        if hit:
+            self.fired.append((kind, site, n))
+        return hit
+
+
+#: the active plan; ``None`` means every injection point is a no-op.
+#: Injection sites read this module global directly (one attribute load)
+#: before doing any other work.
+ACTIVE: Optional[FaultPlan] = None
+
+
+def load_env() -> Optional[FaultPlan]:
+    """(Re-)activate from ``LILAC_FAULTS`` / ``LILAC_FAULTS_SEED``; called
+    at import and by test isolation to resynchronize with the env."""
+    global ACTIVE
+    spec = os.environ.get(_ENV_SPEC, "")
+    if spec:
+        try:
+            seed = int(os.environ.get(_ENV_SEED, "0") or 0)
+        except ValueError:
+            seed = 0
+        ACTIVE = FaultPlan(parse_spec(spec), seed=seed)
+    else:
+        ACTIVE = None
+    return ACTIVE
+
+
+@contextlib.contextmanager
+def inject(spec, seed: int = 0):
+    """Context-manager activation: ``spec`` is a ``LILAC_FAULTS`` string
+    or a list of :class:`FaultRule`.  Restores the previous plan on exit."""
+    global ACTIVE
+    rules = parse_spec(spec) if isinstance(spec, str) else list(spec)
+    prev = ACTIVE
+    plan = FaultPlan(rules, seed=seed)
+    ACTIVE = plan
+    try:
+        yield plan
+    finally:
+        ACTIVE = prev
+
+
+def check(kind: str, site: str = "*") -> bool:
+    """True when an active plan fires ``kind`` at ``site`` this attempt."""
+    plan = ACTIVE
+    if plan is None:
+        return False
+    return plan.fires(kind, site)
+
+
+def fail(kind: str, site: str = "*", slot: Optional[int] = None):
+    """Raise :class:`InjectedFault` when the plan fires, else no-op."""
+    plan = ACTIVE
+    if plan is not None and plan.fires(kind, site):
+        raise InjectedFault(kind, site, slot=slot)
+
+
+def corrupt(kind: str, site: str, out):
+    """Poison a *concrete* floating-point harness output with NaNs when
+    the plan fires.  Tracers pass through untouched: an abstract output is
+    on its way into a jitted executable, where a silently baked NaN could
+    never be attributed back to its harness — corruption faults only fire
+    where containment can observe them (the same boundary at which real
+    kernel NaNs are detected)."""
+    plan = ACTIVE
+    if plan is None:
+        return out
+    try:
+        import jax
+        import jax.numpy as jnp
+        if isinstance(out, jax.core.Tracer):
+            return out
+        dtype = getattr(out, "dtype", None)
+        if dtype is None or not jnp.issubdtype(dtype, jnp.floating):
+            return out
+        if not plan.fires(kind, site):
+            return out
+        return jnp.asarray(out) * jnp.nan
+    except InjectedFault:
+        raise
+    except Exception:
+        return out
+
+
+load_env()

@@ -150,10 +150,16 @@ class Harness:
         self._setup_done = up
 
     def __call__(self, binding: Binding, ctx: CallCtx):
+        from repro.core import faults
+        if faults.ACTIVE is not None:
+            faults.fail("kernel_raise", self.name)
         if not self._is_up() and self.setup is not None:
             self.setup(self.persistent)
             self._mark(True)
-        return self.fn(binding, ctx)
+        out = self.fn(binding, ctx)
+        if faults.ACTIVE is not None:
+            out = faults.corrupt("nan_output", self.name, out)
+        return out
 
     def release(self):
         if self._is_up() and self.teardown is not None:

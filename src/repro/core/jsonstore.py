@@ -88,13 +88,36 @@ class JsonStore:
     def _note_save_error(self):
         """Persistence failed (unwritable path); store stays in-memory."""
 
+    def _note_corrupt_recovery(self):
+        """A torn/corrupt file was quarantined to a ``*.corrupt`` sidecar."""
+
     # -- disk protocol -------------------------------------------------------
+
+    def _quarantine_corrupt(self):
+        """A file that exists but does not parse is a torn or corrupted
+        write (power loss mid-rename, a buggy external writer, disk rot).
+        It must never poison future processes: move it aside to a
+        ``*.corrupt`` sidecar — kept for post-mortem, out of the read
+        path — and start fresh.  Renaming (vs deleting) also stops two
+        concurrent readers from both re-discovering the same bad file."""
+        sidecar = self.path.with_suffix(self.path.suffix + ".corrupt")
+        try:
+            os.replace(self.path, sidecar)
+        except OSError:
+            try:
+                os.unlink(self.path)
+            except OSError:
+                pass
+        self._note_corrupt_recovery()
 
     def _read_disk(self) -> Dict[str, Any]:
         try:
             with open(self.path, "r", encoding="utf-8") as f:
                 doc = json.load(f)
-        except (OSError, json.JSONDecodeError):
+        except OSError:
+            return {}
+        except (json.JSONDecodeError, UnicodeDecodeError, ValueError):
+            self._quarantine_corrupt()
             return {}
         schema = doc.get("schema") if isinstance(doc, dict) else None
         if not isinstance(doc, dict) \
@@ -145,6 +168,7 @@ class JsonStore:
                 with os.fdopen(fd, "w", encoding="utf-8") as f:
                     json.dump(doc, f, indent=1, sort_keys=True)
                 os.replace(tmp, self.path)
+                self._maybe_tear()
             except BaseException:
                 try:
                     os.unlink(tmp)
@@ -155,3 +179,21 @@ class JsonStore:
             if lock_f is not None:
                 fcntl.flock(lock_f.fileno(), fcntl.LOCK_UN)
                 lock_f.close()
+
+    def _maybe_tear(self):
+        """Chaos hook (``cache_torn_write``): the tempfile + ``os.replace``
+        protocol cannot tear in real life on POSIX, so the injection
+        simulates the larger world — NFS, crashed writers, other tools —
+        by truncating the just-written file to half its bytes.  Site name
+        is the file stem (``autotune``, ``plans``, ``quarantine``)."""
+        from repro.core import faults
+        if faults.ACTIVE is None:
+            return
+        if not faults.check("cache_torn_write", self.path.stem):
+            return
+        try:
+            size = os.path.getsize(self.path)
+            with open(self.path, "r+b") as f:
+                f.truncate(max(1, size // 2))
+        except OSError:
+            pass

@@ -500,6 +500,9 @@ class MarshalingCache:
             self._hit(key, key_arrays)
             return val
         self.stats.misses += 1
+        from repro.core import faults
+        if faults.ACTIVE is not None:
+            faults.fail("marshal_raise", spec_name)
         t0 = time.perf_counter()
         val = compute()
         cost = time.perf_counter() - t0
@@ -607,6 +610,9 @@ class DataPlane(MarshalingCache):
 
         self.stats.misses += 1
         ps.misses += 1
+        from repro.core import faults
+        if faults.ACTIVE is not None:
+            faults.fail("marshal_raise", f"{src}->{dst}")
 
         # start set: cached intermediates of the SAME matrix (cost 0) plus
         # the binding loader at its measured cost

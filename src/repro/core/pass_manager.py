@@ -33,8 +33,9 @@ error so in-repo code stays on the new surface.
 from __future__ import annotations
 
 import dataclasses
+import os
 import warnings
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple
 
 import jax
 
@@ -42,10 +43,25 @@ from repro.core import detect as D
 from repro.core import harness as H
 from repro.core import plan as P
 from repro.core import plan_search as PS
-from repro.core.autotune import autotune_disabled
+from repro.core import resilience as R
+from repro.core.autotune import autotune_disabled, variant_key
 from repro.core.marshal import (DataPlane, MarshalingCache, MarshalPolicy,
                                 TrackedArray)
 from repro.core.rewrite import needed_eqn_ids, run_rewritten
+
+_ENV_SHADOW = "LILAC_SHADOW_RATE"
+
+
+def shadow_rate() -> float:
+    """``LILAC_SHADOW_RATE`` in [0, 1]: the fraction of served dispatches
+    that also run the un-rewritten reference for comparison.  Read once at
+    LilacFunction construction — the steady-state dispatch must not pay
+    an environ lookup per call."""
+    try:
+        r = float(os.environ.get(_ENV_SHADOW, "0") or 0.0)
+    except ValueError:
+        return 0.0
+    return min(max(r, 0.0), 1.0)
 
 
 @dataclasses.dataclass
@@ -80,19 +96,23 @@ class CompiledEntry:
     # so warm processes serve it with zero re-search.
     joint: Optional[Dict[str, Any]] = None
     joint_done: bool = False
-    # memoized liveness (rewrite.needed_eqn_ids) for the full match list
-    # and for the enabled=False baseline
-    _needed_full: Optional[frozenset] = None
-    _needed_empty: Optional[frozenset] = None
+    # match indices (into the flattened report) whose every harness
+    # candidate failed under containment: these anchors evaluate as plain
+    # jaxpr equations — the reference floor — until the entry is rebuilt
+    disabled: set = dataclasses.field(default_factory=set)
+    # memoized liveness (rewrite.needed_eqn_ids), keyed by the anchor-id
+    # set of the match list actually evaluated — containment can disable
+    # individual matches, so "full" and "empty" are just two of the keys
+    _needed: Dict[FrozenSet[int], frozenset] = \
+        dataclasses.field(default_factory=dict)
 
     def needed_for(self, matches) -> frozenset:
-        if matches:
-            if self._needed_full is None:
-                self._needed_full = needed_eqn_ids(self.closed_jaxpr, matches)
-            return self._needed_full
-        if self._needed_empty is None:
-            self._needed_empty = needed_eqn_ids(self.closed_jaxpr, [])
-        return self._needed_empty
+        key = frozenset(id(m.anchor_eqn) for m in matches)
+        got = self._needed.get(key)
+        if got is None:
+            got = self._needed[key] = needed_eqn_ids(self.closed_jaxpr,
+                                                     matches)
+        return got
 
 
 def _flat_matches(matches) -> List[D.Match]:
@@ -172,6 +192,14 @@ class LilacFunction:
         # untuned), aligned with last_selections — benchmarks record which
         # swept schedule a plan actually used.
         self.last_schedules: List[Optional[Dict[str, Any]]] = []
+        # failure containment (repro.core.resilience): per-function
+        # counters, the sampled shadow-verification rate (cached — rate 0
+        # must cost one float compare per dispatch), and the recursion
+        # guard that keeps a shadow's own dispatch from shadowing
+        self.resilience_stats = R.ContainmentStats()
+        self._shadow_rate = shadow_rate()
+        self._shadow_ctr = 0
+        self._in_shadow = False
 
     def _make_plan_cache(self, opt) -> Optional[P.PlanCache]:
         if opt is False or (isinstance(opt, str)
@@ -197,6 +225,7 @@ class LilacFunction:
         rather than ever pinning something unservable."""
         pins: Dict[int, Tuple] = {}
         flat = _flat_matches(matches)
+        q = R.shared_quarantine()
         for k, v in (raw or {}).items():
             try:
                 i, name, schedule = int(k), v[0], v[1]
@@ -212,6 +241,12 @@ class LilacFunction:
             except KeyError:
                 continue
             if schedule is not None and schedule not in (h.schedules or ()):
+                continue
+            # a quarantined (harness, variant) must never rehydrate into a
+            # pin: the record predates the incident that quarantined it
+            if q.is_quarantined(flat[i].computation, name,
+                                variant_key(schedule, fuse)) \
+                    or q.is_quarantined(flat[i].computation, name):
                 continue
             pins[i] = (name, schedule, fuse)
         return pins
@@ -371,6 +406,84 @@ class LilacFunction:
         outs = plan.jitted(*leaves)
         return jax.tree_util.tree_unflatten(plan.out_tree, outs)
 
+    def _enabled_matches(self, entry: CompiledEntry) -> List[D.Match]:
+        """The report's matches minus containment-disabled ones.  A
+        scan-body wrapper drops wholesale when any inner match is disabled
+        — there is no per-iteration mix of harness and reference."""
+        matches = entry.report.matches if self.enabled else []
+        if not entry.disabled:
+            return matches
+        idx_of = entry.idx_of
+        return [m for m in matches
+                if not any(idx_of.get(id(fm.anchor_eqn)) in entry.disabled
+                           for fm in _flat_matches([m]))]
+
+    def _serve_plan(self, plan: P.ExecutablePlan, leaves, in_tree):
+        out = self._dispatch_plan(plan, leaves)
+        if self._shadow_rate > 0.0 and not self._in_shadow:
+            out = self._maybe_shadow(plan, leaves, in_tree, out)
+        return out
+
+    def _maybe_shadow(self, plan, leaves, in_tree, out):
+        """Sampled shadow verification: deterministically stratified so a
+        rate of r checks dispatch n iff the integer part of n*r advances —
+        every window of 1/r dispatches contains exactly one check, with no
+        RNG state to perturb."""
+        self._shadow_ctr = n = self._shadow_ctr + 1
+        r = self._shadow_rate
+        if int(n * r) == int((n - 1) * r):
+            return out
+        if any(isinstance(x, jax.core.Tracer) for x in leaves):
+            return out          # values don't exist yet; nothing to compare
+        self.resilience_stats.shadow_checks += 1
+        args, kwargs = jax.tree_util.tree_unflatten(in_tree, leaves)
+        self._in_shadow = True
+        try:
+            ref = self.fn(*args, **kwargs)
+        except Exception:
+            return out          # the reference itself failed; keep ours
+        finally:
+            self._in_shadow = False
+        if R.outputs_close(out, ref):
+            return out
+        # divergence: the accelerated answer is wrong.  Serve the reference
+        # for THIS call, quarantine everything the plan selected, and tear
+        # the plan down so the next dispatch re-tunes and re-bakes.
+        self.resilience_stats.shadow_divergences += 1
+        self._shadow_divergence(plan)
+        return ref
+
+    def _shadow_divergence(self, plan: P.ExecutablePlan):
+        q = R.shared_quarantine()
+        for (m, name), sched in zip(plan.selections, plan.schedules):
+            q.add(m.computation, name, variant_key(sched, None),
+                  reason="shadow divergence", site=name)
+        if self._last_plan is plan:
+            self._last_plan = None
+        self._drop_hot(plan)
+        for entry in self._compiled.values():
+            if entry.plan is plan:
+                entry.plan = None
+                entry.pins.clear()
+                entry.persisted = False
+                entry.joint_done = False
+                entry.joint = None
+
+    def resilience_info(self) -> Dict[str, Any]:
+        """Containment / quarantine / shadow counters for this function
+        plus the shared quarantine store's view — benchmarks and the chaos
+        gate read this instead of poking privates."""
+        q = R.shared_quarantine()
+        return {
+            "containment": self.resilience_stats.as_dict(),
+            "quarantine": q.stats.as_dict(),
+            "quarantine_active": len(q.active()),
+            "quarantine_path": str(q.path),
+            "shadow_rate": self._shadow_rate,
+            "disabled_matches": sum(len(e.disabled)
+                                    for e in self._compiled.values()),
+        }
+
     _HOT_PLAN_LIMIT = 32
 
     def _note_hot(self, plan: P.ExecutablePlan):
@@ -402,7 +515,7 @@ class LilacFunction:
         if plan is not None and plan.registry_epoch == epoch:
             leaves = plan.match_and_unwrap(in_tree, flat, self.enabled)
             if leaves is not None:
-                return self._dispatch_plan(plan, leaves)
+                return self._serve_plan(plan, leaves, in_tree)
         # hot-plan scan: bucketed callers rotate between a handful of
         # signatures; any of them can serve without re-keying the entry
         for hp in self._hot_plans:
@@ -412,7 +525,7 @@ class LilacFunction:
             if leaves is not None:
                 self._last_plan = hp
                 self._note_hot(hp)
-                return self._dispatch_plan(hp, leaves)
+                return self._serve_plan(hp, leaves, in_tree)
         entry, raw_flat, uflat, in_tree = self._prepare(
             args, kwargs, flat, in_tree)
         # second chance: another signature's plan was hot; this entry may
@@ -424,9 +537,9 @@ class LilacFunction:
             if leaves is not None:
                 self._last_plan = plan
                 self._note_hot(plan)
-                return self._dispatch_plan(plan, leaves)
+                return self._serve_plan(plan, leaves, in_tree)
 
-        matches = entry.report.matches if self.enabled else []
+        matches = self._enabled_matches(entry)
         select = (self._pinned_select(entry) if self.policy == "autotune"
                   else self._select)
         # Recording runs even when leaves are tracers (the call sits under
@@ -449,15 +562,58 @@ class LilacFunction:
         schedules: List[Optional[Dict[str, Any]]] = []
 
         def on_select(m, h, ctx):
-            selections.append((m, h.name))
             sched = getattr(ctx, "schedule", None)
-            schedules.append(sched)
+            if selections and selections[-1][0] is m:
+                # containment retry: the previous candidate for this same
+                # anchor failed — replace its record, don't append
+                selections[-1] = (m, h.name)
+                schedules[-1] = sched
+            else:
+                selections.append((m, h.name))
+                schedules.append(sched)
             if recorder is not None:
                 recorder.begin(m, h, sched, getattr(ctx, "fuse", None))
 
-        outs = run_rewritten(
-            entry.closed_jaxpr, matches, select, uflat, ctx_factory,
-            on_select=on_select, needed=entry.needed_for(matches))
+        def on_quarantine(m, h, vkey, reason):
+            # the quarantined harness may be pinned, persisted, baked and
+            # jointly-assigned for this entry: unwind all four so the next
+            # selection re-tunes and the next resolution re-bakes
+            i = entry.idx_of.get(id(m.anchor_eqn))
+            pin = entry.pins.get(i) if i is not None else None
+            if pin is not None and pin[0] == h.name:
+                del entry.pins[i]
+            entry.persisted = False
+            entry.joint_done = False
+            entry.joint = None
+            entry.no_bake = False
+            entry.bake_error = None
+            if entry.plan is not None:
+                if self._last_plan is entry.plan:
+                    self._last_plan = None
+                self._drop_hot(entry.plan)
+                entry.plan = None
+
+        contain = R.Containment(self.registry, R.shared_quarantine(),
+                                on_quarantine=on_quarantine,
+                                stats=self.resilience_stats)
+        # containment retry loop: a ReferenceFallback disables ONE match
+        # (its anchor then evaluates as a plain equation), so the loop is
+        # bounded by the match count + the final all-reference pass
+        for _ in range(len(_flat_matches(matches)) + 1):
+            try:
+                outs = run_rewritten(
+                    entry.closed_jaxpr, matches, select, uflat, ctx_factory,
+                    on_select=on_select, needed=entry.needed_for(matches),
+                    contain=contain)
+                break
+            except R.ReferenceFallback as rf:
+                i = entry.idx_of.get(id(rf.match.anchor_eqn))
+                if i is None:
+                    raise   # not this entry's match; nothing we can disable
+                entry.disabled.add(i)
+                matches = self._enabled_matches(entry)
+                selections.clear()
+                schedules.clear()
         self.last_selections = selections
         self.last_schedules = schedules
         joint_moved = self._maybe_joint(entry)

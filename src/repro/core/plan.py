@@ -284,6 +284,7 @@ class PlanCacheStats:
     rejected: int = 0        # on-disk record failed rehydration
     invalidations: int = 0   # schema/registry-fingerprint drop
     save_errors: int = 0
+    corrupt_recoveries: int = 0  # torn cache file quarantined, fresh start
 
     def as_dict(self) -> Dict[str, int]:
         return dataclasses.asdict(self)
@@ -318,6 +319,9 @@ class PlanCache(JsonStore):
 
     def _note_invalidation(self):
         self.stats.invalidations += 1
+
+    def _note_corrupt_recovery(self):
+        self.stats.corrupt_recoveries += 1
 
     def _note_save_error(self):
         self.stats.save_errors += 1
@@ -727,9 +731,12 @@ def bake_plan(*, closed_jaxpr, matches, needed, recorder: PlanRecorder,
     caller decides whether to disable baking for the entry."""
     import jax.numpy as jnp
 
+    from repro.core import faults
     from repro.core.harness import CallCtx
     from repro.core.rewrite import run_rewritten
 
+    if faults.ACTIVE is not None:
+        faults.fail("bake_raise", "bake")
     if not recorder.complete_for(matches):
         raise PlanBakeError("recorded call is missing selections")
     slots = {id(m.anchor_eqn): recorder.slots[id(m.anchor_eqn)]

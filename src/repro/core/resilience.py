@@ -1,0 +1,353 @@
+"""Contained execution and harness quarantine (the fail-safe layer).
+
+LiLAC's contract is that accelerating a program must never make it worse
+than the un-rewritten original: a harness that raises, returns the wrong
+shape, or emits non-finite values is *our* failure, not the user's.  This
+module supplies the two pieces that enforce it:
+
+* :class:`Containment` — the wrapper every anchor invocation in
+  :func:`repro.core.rewrite.run_rewritten` runs under.  A failed attempt
+  (exception, non-finite output, output-size mismatch) quarantines that
+  ``(computation, harness, variant)`` and retries the anchor with the
+  next-best candidate, default variant first.  When candidates exhaust it
+  raises :class:`ReferenceFallback`, which the pass manager catches by
+  disabling the match — the anchor then evaluates as an ordinary jaxpr
+  equation, i.e. the un-rewritten reference path, the always-available
+  floor.
+* :class:`QuarantineStore` — persisted quarantine records (reason, site,
+  timestamp, TTL) on the shared :class:`~repro.core.jsonstore.JsonStore`
+  disk protocol, so a harness that misbehaved in one process is not
+  re-tried by the next until its TTL lapses.  The registry fingerprint is
+  pinned to ``""``: quarantines deliberately survive harness-set changes
+  — a record names its harness explicitly, and a crash yesterday is
+  evidence today regardless of what else was registered.
+
+Records expire (``LILAC_QUARANTINE_TTL`` seconds, default 3600) so a
+transient fault — an OOM under memory pressure, a driver hiccup — does
+not permanently forfeit the fastest kernel; re-admission goes back
+through autotuning, which re-measures rather than trusting stale pins.
+
+Env knobs: ``LILAC_QUARANTINE_CACHE`` (store path),
+``LILAC_QUARANTINE_TTL`` (seconds; ``<= 0`` means never expire).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import os
+import time
+from pathlib import Path
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core.jsonstore import JsonStore
+
+_ENV_PATH = "LILAC_QUARANTINE_CACHE"
+_ENV_TTL = "LILAC_QUARANTINE_TTL"
+DEFAULT_TTL_S = 3600.0
+
+
+def default_quarantine_path() -> Path:
+    env = os.environ.get(_ENV_PATH)
+    if env:
+        return Path(env)
+    xdg = os.environ.get("XDG_CACHE_HOME")
+    base = Path(xdg) if xdg else Path.home() / ".cache"
+    return base / "lilac" / "quarantine.json"
+
+
+def default_ttl_s() -> float:
+    try:
+        return float(os.environ.get(_ENV_TTL, DEFAULT_TTL_S))
+    except ValueError:
+        return DEFAULT_TTL_S
+
+
+@dataclasses.dataclass
+class QuarantineStats:
+    added: int = 0
+    hits: int = 0            # lookups answered "yes, quarantined"
+    expired: int = 0         # records lazily purged on lookup
+    invalidations: int = 0
+    save_errors: int = 0
+    corrupt_recoveries: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class QuarantineStore(JsonStore):
+    """Persistent ``(computation, harness, variant) -> incident`` records.
+
+    Layout::
+
+        {"schema": 1, "registry": "",
+         "entries": {"spmv.csr|pallas.ell|default": {
+             "reason": "exception: ...", "site": "pallas.ell",
+             "t": 1754640000.0, "ttl": 3600.0}}}
+
+    ``variant`` is :func:`repro.core.autotune.variant_key` of the
+    (schedule, fuse) the harness ran with — a bad schedule quarantines
+    that schedule, not the harness wholesale; the ``"default"`` variant
+    is what containment fallback and candidate filtering consult.
+    """
+
+    schema_version = 1
+
+    def __init__(self, path: Optional[os.PathLike] = None):
+        self.stats = QuarantineStats()   # before super(): _note_* hooks
+        super().__init__(path, registry_fingerprint="")
+
+    def default_path(self) -> Path:
+        return default_quarantine_path()
+
+    def _note_invalidation(self):
+        self.stats.invalidations += 1
+
+    def _note_save_error(self):
+        self.stats.save_errors += 1
+
+    def _note_corrupt_recovery(self):
+        self.stats.corrupt_recoveries += 1
+
+    # -- record surface ------------------------------------------------------
+
+    @staticmethod
+    def key_of(comp: str, harness: str, vkey: str = "default") -> str:
+        return f"{comp}|{harness}|{vkey}"
+
+    def _ensure_loaded(self):
+        if not self.loaded:
+            self.load()
+
+    def _expired(self, rec: Dict[str, Any], now: Optional[float] = None
+                 ) -> bool:
+        ttl = float(rec.get("ttl", DEFAULT_TTL_S))
+        if ttl <= 0:
+            return False
+        t = float(rec.get("t", 0.0))
+        return (time.time() if now is None else now) - t > ttl
+
+    def add(self, comp: str, harness: str, vkey: str = "default", *,
+            reason: str, site: str = "", ttl: Optional[float] = None,
+            persist: bool = True) -> str:
+        self._ensure_loaded()
+        key = self.key_of(comp, harness, vkey)
+        self.entries[key] = {
+            "reason": str(reason)[:500],
+            "site": site,
+            "t": time.time(),
+            "ttl": float(ttl if ttl is not None else default_ttl_s()),
+        }
+        self.stats.added += 1
+        if persist:
+            self.save()
+        return key
+
+    def is_quarantined(self, comp: str, harness: str,
+                       vkey: str = "default") -> bool:
+        self._ensure_loaded()
+        key = self.key_of(comp, harness, vkey)
+        rec = self.entries.get(key)
+        if rec is None:
+            return False
+        if self._expired(rec):
+            del self.entries[key]
+            self.stats.expired += 1
+            return False
+        self.stats.hits += 1
+        return True
+
+    def active(self) -> Dict[str, Dict[str, Any]]:
+        """All unexpired records (purging expired ones as a side effect)."""
+        self._ensure_loaded()
+        now = time.time()
+        dead = [k for k, r in self.entries.items() if self._expired(r, now)]
+        for k in dead:
+            del self.entries[k]
+            self.stats.expired += 1
+        return dict(self.entries)
+
+
+_SHARED: Dict[str, QuarantineStore] = {}
+
+
+def shared_quarantine(path: Optional[os.PathLike] = None) -> QuarantineStore:
+    """Process-wide QuarantineStore per file: every compiled function and
+    the autotuner consult one in-memory view (an incident observed by one
+    function immediately protects the others)."""
+    key = str(Path(path) if path is not None else default_quarantine_path())
+    q = _SHARED.get(key)
+    if q is None:
+        q = _SHARED[key] = QuarantineStore(key)
+    return q
+
+
+def reset_shared_quarantine():
+    """Drop the process-wide views (tests; an externally rewritten store
+    file is otherwise invisible to functions compiled afterwards)."""
+    _SHARED.clear()
+
+
+# ---------------------------------------------------------------------------
+# Contained anchor execution
+# ---------------------------------------------------------------------------
+
+class ReferenceFallback(Exception):
+    """Every candidate for an anchor failed; the pass manager must disable
+    the match so the anchor evaluates as a plain jaxpr equation."""
+
+    def __init__(self, match, reason: str):
+        super().__init__(
+            f"all harness candidates failed for {match.computation} "
+            f"({reason}); falling back to reference")
+        self.match = match
+        self.reason = reason
+
+
+@dataclasses.dataclass
+class ContainmentStats:
+    contained_exceptions: int = 0
+    nonfinite_outputs: int = 0
+    shape_mismatches: int = 0
+    quarantines: int = 0
+    fallbacks: int = 0       # anchors that exhausted every candidate
+    shadow_checks: int = 0
+    shadow_divergences: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+
+class Containment:
+    """The per-anchor retry loop :func:`~repro.core.rewrite.run_rewritten`
+    calls instead of invoking a harness directly.
+
+    ``attempt(h, ctx)`` (supplied by the rewriter) runs the full invoke
+    path — vjp wrapping, fusion gating, epilogue — for one candidate.
+    Containment validates what comes back: a raised exception, an output
+    whose element count cannot coerce to the anchor's output aval, or a
+    concrete non-finite float array all count as failures; a tracer output
+    is size-checked only (its values do not exist yet — runtime NaNs on
+    the jitted path are the shadow verifier's and the baked-plan guards'
+    job).  Each failure quarantines the exact ``(computation, harness,
+    variant)`` and moves on; success returns the output unchanged, so the
+    no-fault path adds one try/except frame and one size compare.
+    """
+
+    def __init__(self, registry, quarantine: QuarantineStore,
+                 on_quarantine: Optional[Callable[..., None]] = None,
+                 stats: Optional[ContainmentStats] = None):
+        self.registry = registry
+        self.quarantine = quarantine
+        self.on_quarantine = on_quarantine
+        self.stats = stats if stats is not None else ContainmentStats()
+
+    def __call__(self, m, harness, ctx, binding_vals, attempt,
+                 on_select=None):
+        from repro.core.autotune import variant_key
+        eqn = m.anchor_eqn
+        aval = (eqn.outvars[1].aval if m.variant == "loop"
+                else eqn.outvars[0].aval)
+        tried = set()
+        h, c = harness, ctx
+        while True:
+            if on_select is not None:
+                on_select(m, h, c)
+            tried.add(h.name)
+            vkey = variant_key(getattr(c, "schedule", None),
+                               getattr(c, "fuse", None))
+            reason = None
+            try:
+                out = attempt(h, c)
+            except Exception as e:  # containment boundary: degrade, never die
+                self.stats.contained_exceptions += 1
+                reason = f"exception: {type(e).__name__}: {e}"[:300]
+                out = None
+            if reason is None:
+                reason = self._validate(out, aval)
+            if reason is None:
+                return out
+            self._record(m, h, vkey, reason)
+            nxt = self._next_candidate(m, c, tried)
+            if nxt is None:
+                self.stats.fallbacks += 1
+                raise ReferenceFallback(m, reason)
+            h, c = nxt
+
+    def _validate(self, out, aval) -> Optional[str]:
+        import jax
+        import jax.numpy as jnp
+        try:
+            shape = getattr(out, "shape", None)
+            if shape is None:
+                return f"non-array output: {type(out).__name__}"
+            if math.prod(shape) != math.prod(aval.shape):
+                self.stats.shape_mismatches += 1
+                return (f"shape mismatch: got {tuple(shape)}, "
+                        f"anchor wants {tuple(aval.shape)}")
+            if isinstance(out, jax.core.Tracer):
+                return None
+            dtype = getattr(out, "dtype", None)
+            if dtype is not None and jnp.issubdtype(dtype, jnp.floating):
+                if not bool(jnp.isfinite(out).all()):
+                    self.stats.nonfinite_outputs += 1
+                    return "non-finite output"
+        except Exception:
+            # the validator itself must never fail a healthy call
+            return None
+        return None
+
+    def _record(self, m, h, vkey: str, reason: str):
+        self.stats.quarantines += 1
+        self.quarantine.add(m.computation, h.name, vkey,
+                            reason=reason, site=h.name)
+        if self.on_quarantine is not None:
+            try:
+                self.on_quarantine(m, h, vkey, reason)
+            except Exception:
+                pass
+
+    def _next_candidate(self, m, ctx, tried) -> Optional[Tuple[Any, Any]]:
+        """Next harness to try for this anchor: the platform default first
+        (it is the best-vetted body), then registration order; always at
+        the default (schedule=None, fuse=None) variant — a pinned schedule
+        that just failed is no basis for trusting another tuned one."""
+        cands = self.registry.candidates(m.computation, m.format,
+                                         ctx.platform, ctx.mode)
+        dname = self.registry.default_name(m.computation, ctx.platform)
+        ordered = sorted(cands, key=lambda h: h.name != dname)
+        for h in ordered:
+            if h.name in tried:
+                continue
+            if self.quarantine.is_quarantined(m.computation, h.name):
+                continue
+            return h, dataclasses.replace(ctx, schedule=None, fuse=None)
+        return None
+
+
+def outputs_close(got, want, rtol: float = 1e-4, atol: float = 1e-5) -> bool:
+    """Leafwise comparison for shadow verification: every pair of leaves
+    must match in total size and (for floats) be ``allclose``; NaN in the
+    accelerated output where the reference is finite is a divergence."""
+    import numpy as np
+    import jax
+    g_leaves = jax.tree_util.tree_leaves(got)
+    w_leaves = jax.tree_util.tree_leaves(want)
+    if len(g_leaves) != len(w_leaves):
+        return False
+    for g, w in zip(g_leaves, w_leaves):
+        ga, wa = np.asarray(g), np.asarray(w)
+        if ga.size != wa.size:
+            return False
+        ga = ga.reshape(wa.shape)
+        if np.issubdtype(wa.dtype, np.floating) \
+                or np.issubdtype(wa.dtype, np.complexfloating):
+            if not np.allclose(ga, wa, rtol=rtol, atol=atol, equal_nan=True):
+                return False
+            # equal_nan tolerates NaN only where the REFERENCE has NaN
+            if np.isnan(ga).any() and not np.isnan(wa).any():
+                return False
+        else:
+            if not (ga == wa).all():
+                return False
+    return True

@@ -63,6 +63,7 @@ def run_rewritten(closed_jaxpr,
                   ctx_factory: Callable[[Match], CallCtx],
                   on_select: Optional[Callable[[Match, Harness], None]] = None,
                   needed: Optional[frozenset] = None,
+                  contain: Optional[Callable] = None,
                   ) -> List[Any]:
     """Evaluate ``closed_jaxpr`` with matched anchors replaced by harness
     calls.  Traceable: under jit this builds the rewritten HLO.
@@ -73,7 +74,16 @@ def run_rewritten(closed_jaxpr,
     and benchmarks use it to report which backend actually ran.
 
     ``needed`` (if given) is a precomputed :func:`needed_eqn_ids` result
-    for exactly this ``(closed_jaxpr, matches)`` pair."""
+    for exactly this ``(closed_jaxpr, matches)`` pair.
+
+    ``contain`` (if given) is a :class:`repro.core.resilience.Containment`
+    -shaped callable ``(m, harness, ctx, binding_vals, attempt, on_select)
+    -> out``: every anchor invocation routes through it so a failing
+    harness can be retried with another candidate or escalated to
+    :class:`~repro.core.resilience.ReferenceFallback` instead of
+    surfacing to the user.  When containment retries, it re-issues
+    ``on_select`` for each candidate it tries — observers must treat a
+    repeated (match, ...) as a replacement, not a new site."""
     jaxpr = closed_jaxpr.jaxpr
     env: Dict[Any, Any] = {}
 
@@ -100,10 +110,10 @@ def run_rewritten(closed_jaxpr,
         if m is not None:
             if m.variant == "scan_body":
                 _eval_scan_body(eqn, m, select, read, write, ctx_factory,
-                                on_select)
+                                on_select, contain)
             else:
                 _eval_anchor(eqn, m, select, read, write, ctx_factory,
-                             on_select)
+                             on_select, contain)
             continue
         if id(eqn) not in needed:
             continue
@@ -190,38 +200,51 @@ def _call_with_vjp(harness: Harness, binding_vals: Dict[str, Any],
 
 
 def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory,
-                 on_select=None):
+                 on_select=None, contain=None):
     binding_vals = {
         k: (v if isinstance(v, (int, float, bool)) else read(v))
         for k, v in m.binding.items()
     }
     ctx = ctx_factory(m)
     harness = select(m, binding_vals, ctx)
-    if on_select is not None:
-        on_select(m, harness, ctx)
-    clause = getattr(harness, "vjp", None)
-    wrap = clause is not None and any(
-        isinstance(binding_vals.get(k), jcore.Tracer) for k in clause.wrt)
-    if wrap:
-        # Unfuse any detected epilogue under differentiation: the declared
-        # backward covers the core computation only, so the epilogue is
-        # applied outside the opaque call where jax can transpose it.
-        inner_ctx = (dataclasses.replace(ctx, epilogue=None)
-                     if ctx.epilogue is not None else ctx)
-        out = _call_with_vjp(harness, binding_vals, inner_ctx)
-        if m.epilogue is not None:
-            out = apply_epilogue(out, binding_vals.get("bias"), m.epilogue)
+
+    def attempt(h: Harness, c: CallCtx):
+        """The full invoke path for one candidate — containment retries
+        this with other (harness, ctx) pairs on failure."""
+        clause = getattr(h, "vjp", None)
+        wrap = clause is not None and any(
+            isinstance(binding_vals.get(k), jcore.Tracer) for k in clause.wrt)
+        if wrap:
+            # Unfuse any detected epilogue under differentiation: the
+            # declared backward covers the core computation only, so the
+            # epilogue is applied outside the opaque call where jax can
+            # transpose it.
+            inner_ctx = (dataclasses.replace(c, epilogue=None)
+                         if c.epilogue is not None else c)
+            out = _call_with_vjp(h, binding_vals, inner_ctx)
+            if m.epilogue is not None:
+                out = apply_epilogue(out, binding_vals.get("bias"),
+                                     m.epilogue)
+        else:
+            fused = effective_fuse(h, c)
+            if (m.epilogue is not None and not fused
+                    and getattr(h, "fuse_epilogue", False)
+                    and c.epilogue is not None):
+                # fuse-capable harness pinned UNFUSED: the body must not
+                # see the epilogue (it would apply it in-kernel)
+                c = dataclasses.replace(c, epilogue=None)
+            out = h(binding_vals, c)
+            if m.epilogue is not None and not fused:
+                out = apply_epilogue(out, binding_vals.get("bias"),
+                                     m.epilogue)
+        return out
+
+    if contain is not None:
+        out = contain(m, harness, ctx, binding_vals, attempt, on_select)
     else:
-        fused = effective_fuse(harness, ctx)
-        if (m.epilogue is not None and not fused
-                and getattr(harness, "fuse_epilogue", False)
-                and ctx.epilogue is not None):
-            # fuse-capable harness pinned UNFUSED: the body must not see
-            # the epilogue (it would apply it in-kernel)
-            ctx = dataclasses.replace(ctx, epilogue=None)
-        out = harness(binding_vals, ctx)
-        if m.epilogue is not None and not fused:
-            out = apply_epilogue(out, binding_vals.get("bias"), m.epilogue)
+        if on_select is not None:
+            on_select(m, harness, ctx)
+        out = attempt(harness, ctx)
     if m.variant == "loop":
         # scan anchor: outvars = (final counter, final accumulator)
         counter_init = None
@@ -241,7 +264,7 @@ def _eval_anchor(eqn, m: Match, select, read, write, ctx_factory,
 
 
 def _eval_scan_body(eqn, m: Match, select, read, write, ctx_factory,
-                    on_select=None):
+                    on_select=None, contain=None):
     """Rebuild a ``lax.scan`` around a rewritten body (variant='scan_body'
     matches): the body was detected once; tracing it here selects kernels
     once, and the compiled loop reuses them on every iteration.  Operands
@@ -260,7 +283,7 @@ def _eval_scan_body(eqn, m: Match, select, read, write, ctx_factory,
     def body_fn(carry, x):
         flat = list(consts) + list(carry) + list(x)
         outs = run_rewritten(body_cj, body_matches, select, flat,
-                             ctx_factory, on_select, needed)
+                             ctx_factory, on_select, needed, contain)
         return tuple(outs[:ncarry]), tuple(outs[ncarry:])
 
     carry_out, ys = jax.lax.scan(

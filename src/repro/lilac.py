@@ -28,8 +28,14 @@ Library implementers (spec + function = a new backend)::
 ``lilac_optimize(fn)`` is ``lilac.compile(fn, mode="trace")`` and
 ``lilac_accelerate(fn)`` is ``lilac.compile(fn, mode="host")``.
 """
+from repro.core import faults
 from repro.core.harness import (REGISTRY, CallCtx, DuplicateHarnessError,
                                 Harness, HarnessRegistry)
+from repro.core.resilience import (Containment, ContainmentStats,
+                                   QuarantineStore, ReferenceFallback,
+                                   default_quarantine_path, outputs_close,
+                                   reset_shared_quarantine,
+                                   shared_quarantine)
 from repro.core.marshal import (FORMATS, GRAPH, SOURCES, ConversionEdge,
                                 ConversionGraph, DataPlane, MarshalingCache,
                                 MarshalPolicy, ReadObject, SparseFormat,
@@ -73,6 +79,10 @@ __all__ = [
     "DataPlane", "MarshalPolicy", "SparseFormat", "ConversionEdge",
     "ConversionGraph", "FORMATS", "GRAPH", "SOURCES", "edge",
     "register_format", "register_source",
+    # resilience (fault containment, quarantine, chaos injection)
+    "faults", "Containment", "ContainmentStats", "QuarantineStore",
+    "ReferenceFallback", "default_quarantine_path", "outputs_close",
+    "shared_quarantine", "reset_shared_quarantine",
     # deprecated shims
     "lilac_optimize", "lilac_accelerate", "LilacDeprecationWarning",
 ]

@@ -64,6 +64,14 @@ class ServeConfig:
     # prewarm — requests at other lengths still work, they just pay a
     # first-occurrence jit compile on the request path
     prefill_lengths: Tuple[int, ...] = ()
+    # default per-request deadline (seconds from arrival): a request past
+    # it is evicted with failed="deadline" instead of holding a slot;
+    # None = no deadline unless the Request carries its own
+    deadline_s: Optional[float] = None
+    # when set, submit() admits via Scheduler.try_admit(deadline=...)
+    # (bounded retry-with-backoff on a full queue) instead of a single
+    # SchedulerFull-raising attempt
+    admit_deadline_s: Optional[float] = None
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)
@@ -96,6 +104,9 @@ class Engine:
                 model.decode, mode=self.config.lilac_mode,
                 policy=self.config.policy,
                 plan_cache=self.config.plan_cache)
+            info = getattr(self._decode, "resilience_info", None)
+            if info is not None:
+                self.metrics.set_resilience_provider(info)
         else:
             self._decode = model.decode
         if self.config.jit_prefill:
@@ -185,17 +196,42 @@ class Engine:
 
     def submit(self, req: Request) -> bool:
         """Enqueue a request; False (and a rejection metric) when the
-        queue is full or the request cannot fit any bucket."""
+        queue is full or the request cannot fit any bucket.  With
+        ``config.admit_deadline_s`` set, a full queue is retried with
+        bounded backoff (``Scheduler.try_admit``) before rejecting."""
         from repro.serve.buckets import BucketError
         from repro.serve.scheduler import SchedulerFull
         if req.eos_id is None:
             req.eos_id = self.config.eos_id
+        if req.deadline_s is None:
+            req.deadline_s = self.config.deadline_s
         try:
             self.buckets.seq_bucket(req.prompt_len + req.max_new_tokens)
-            self.scheduler.submit(req)
-        except (BucketError, SchedulerFull):
+        except BucketError:
             self.metrics.record_rejected()
             return False
+        if self.config.admit_deadline_s is not None:
+            retries = 0
+
+            def _sleep(dt, _sleep=time.sleep):
+                nonlocal retries
+                retries += 1
+                _sleep(dt)
+
+            ok = self.scheduler.try_admit(
+                req, deadline=self.config.admit_deadline_s, sleep=_sleep)
+            if retries:
+                self.metrics.record_admission_retries(retries)
+            if not ok:
+                self.metrics.record_admission_timeout()
+                self.metrics.record_rejected()
+                return False
+        else:
+            try:
+                self.scheduler.submit(req)
+            except SchedulerFull:
+                self.metrics.record_rejected()
+                return False
         req.arrival_t = self.clock()
         self.metrics.record_submit(req.rid, req.arrival_t, req.prompt_len)
         return True
@@ -206,6 +242,7 @@ class Engine:
         """Admit -> re-bucket -> prefill admissions -> decode -> evict.
         Returns the requests that finished during this step."""
         finished: List[Request] = []
+        self._expire_deadlines()
         admitted = self.scheduler.admissions()
         if self.scheduler.active:
             self._fit_buckets()
@@ -301,6 +338,7 @@ class Engine:
             self.metrics.record_admit(req.rid, req.prefill_s, req.ttft_s)
 
     def _decode_once(self):
+        from repro.core import faults
         tb, ts = self._shape
         active = self.scheduler.active
         tokens = np.zeros((tb, 1), np.int32)
@@ -310,16 +348,75 @@ class Engine:
             # the new token is written at the row's current depth
             pos[i] = r.prompt_len + len(r.tokens) - 1
         t0 = self.clock()
-        logits, self._cache = self._decode(self.params, self._cache,
-                                           tokens, pos)
+        try:
+            if faults.ACTIVE is not None:
+                # attribute the injected fault to a rotating batch slot so
+                # chaos runs exercise eviction at every position
+                slot = faults.ACTIVE.attempts(
+                    "decode_raise", "decode") % len(active)
+                faults.fail("decode_raise", "decode", slot=slot)
+            logits, self._cache = self._decode(self.params, self._cache,
+                                               tokens, pos)
+        except Exception as e:   # containment boundary: poison one slot
+            slot = getattr(e, "slot", None)
+            if not isinstance(slot, int) or not 0 <= slot < len(active):
+                slot = len(active) - 1
+            active[slot].failed = \
+                f"decode: {type(e).__name__}: {e}"[:200]
+            self.metrics.record_decode_fault()
+            # the cache was NOT reassigned, so this step is a no-op for
+            # the survivors: they redo the identical decode next step and
+            # their streams stay bit-identical to a fault-free run
+            return
         dt = self.clock() - t0
-        nxt = np.argmax(np.asarray(logits), axis=-1)
+        logits_np = np.asarray(logits)
+        if faults.ACTIVE is not None and np.issubdtype(
+                logits_np.dtype, np.floating):
+            if faults.check("decode_nan", "decode"):
+                slot = faults.ACTIVE.attempts(
+                    "decode_nan", "decode") % len(active)
+                logits_np = np.array(logits_np, copy=True)
+                logits_np[slot] = np.nan
+        # per-row finite check: a NaN/Inf row fails only that request; the
+        # cache row itself is overwritten or compacted away at eviction
+        finite = np.isfinite(
+            logits_np.reshape(logits_np.shape[0], -1)).all(axis=1)
+        nxt = np.argmax(logits_np, axis=-1)
         for i, r in enumerate(active):
+            if not finite[i]:
+                r.failed = "non-finite decode logits"
+                self.metrics.record_decode_fault()
+                continue
             r.tokens.append(int(nxt[i]))
         self.metrics.record_step(
             dt, batch=tb, active=len(active),
             queue_depth=self.scheduler.queue_depth,
             bucket_hit=(tb, ts) in self._prewarmed)
+
+    def _expire_deadlines(self):
+        """Evict requests past their per-request deadline.  Active ones
+        are marked failed and leave through the ordinary compaction;
+        waiting ones are dropped from the queue directly (they hold no
+        cache slot, so no moves are needed)."""
+        now = self.clock()
+
+        def _past(r: Request) -> bool:
+            return (r.deadline_s is not None and r.failed is None
+                    and r.arrival_t and now - r.arrival_t > r.deadline_s)
+
+        for r in self.scheduler.active:
+            if _past(r):
+                r.failed = "deadline"
+        expired = [r for r in self.scheduler.waiting if _past(r)]
+        if expired:
+            self.scheduler.waiting = deque(
+                r for r in self.scheduler.waiting if r not in expired)
+            for r in expired:
+                r.failed = "deadline"
+                r.finish_t = now
+                self.metrics.record_fault_eviction("deadline")
+                self.metrics.record_finish(r.rid, len(r.tokens),
+                                           now - r.arrival_t)
 
     def _evict(self) -> List[Request]:
         finished, moves = self.scheduler.evict_finished()
@@ -328,6 +425,8 @@ class Engine:
         now = self.clock()
         for r in finished:
             r.finish_t = now
+            if r.failed is not None:
+                self.metrics.record_fault_eviction(r.failed)
             self.metrics.record_finish(r.rid, len(r.tokens),
                                        now - r.arrival_t)
         return finished

@@ -83,6 +83,13 @@ class ServeMetrics:
         self.admissions = 0
         self.rejected = 0
         self.prewarm: Dict[str, Any] = {}
+        # resilience counters (see docs/resilience.md)
+        self.decode_faults = 0         # decode steps that raised / went NaN
+        self.fault_evictions = 0       # requests evicted with .failed set
+        self.deadline_evictions = 0    # subset of fault_evictions: deadline
+        self.admission_retries = 0     # try_admit backoff sleeps
+        self.admission_timeouts = 0    # try_admit gave up within deadline
+        self._resilience_provider = None   # e.g. LilacFunction.resilience_info
 
     # -- recording hooks (called by the engine) --------------------------
 
@@ -123,6 +130,26 @@ class ServeMetrics:
     def record_prewarm(self, report: Dict[str, Any]):
         self.prewarm = dict(report)
 
+    def record_decode_fault(self):
+        self.decode_faults += 1
+
+    def record_fault_eviction(self, reason: str):
+        self.fault_evictions += 1
+        if reason == "deadline":
+            self.deadline_evictions += 1
+
+    def record_admission_retries(self, n: int):
+        self.admission_retries += int(n)
+
+    def record_admission_timeout(self):
+        self.admission_timeouts += 1
+
+    def set_resilience_provider(self, fn):
+        """``fn() -> dict`` merged into the snapshot's resilience section
+        (the engine wires ``LilacFunction.resilience_info`` here so one
+        snapshot covers both serving- and compiler-level containment)."""
+        self._resilience_provider = fn
+
     # -- export ----------------------------------------------------------
 
     def snapshot(self) -> Dict[str, Any]:
@@ -158,8 +185,24 @@ class ServeMetrics:
             "buckets": {"hits": self.bucket_hits,
                         "misses": self.bucket_misses,
                         "cache_resizes": self.cache_resizes},
+            "resilience": self._resilience_section(),
             "prewarm": self.prewarm,
         }
+
+    def _resilience_section(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
+            "decode_faults": self.decode_faults,
+            "fault_evictions": self.fault_evictions,
+            "deadline_evictions": self.deadline_evictions,
+            "admission_retries": self.admission_retries,
+            "admission_timeouts": self.admission_timeouts,
+        }
+        if self._resilience_provider is not None:
+            try:
+                out["lilac"] = self._resilience_provider()
+            except Exception:
+                pass
+        return out
 
     def save(self, path: str):
         with open(path, "w", encoding="utf-8") as f:

@@ -24,8 +24,9 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
 from collections import deque
-from typing import Deque, List, Optional, Tuple
+from typing import Callable, Deque, List, Optional, Tuple
 
 import numpy as np
 
@@ -46,11 +47,19 @@ class Request:                        # stateful records, not values
     rid: int = dataclasses.field(default_factory=lambda: next(_rid_counter))
     eos_id: Optional[int] = None
     arrival_t: float = 0.0
+    # per-request deadline: seconds from arrival after which the engine
+    # evicts the request instead of letting it occupy a slot forever
+    # (None = no deadline; a ServeConfig default may fill it at submit)
+    deadline_s: Optional[float] = None
     # filled by the engine as the request progresses
     tokens: List[int] = dataclasses.field(default_factory=list)
     ttft_s: Optional[float] = None        # arrival -> first token
     finish_t: Optional[float] = None
     prefill_s: Optional[float] = None
+    # non-None terminates the request abnormally (decode fault, NaN
+    # logits, deadline): ``done`` turns True so the ordinary eviction
+    # compaction removes it — only the poisoned request leaves the batch
+    failed: Optional[str] = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, dtype=np.int32).reshape(-1)
@@ -65,6 +74,8 @@ class Request:                        # stateful records, not values
 
     @property
     def done(self) -> bool:
+        if self.failed is not None:
+            return True
         if len(self.tokens) >= self.max_new_tokens:
             return True
         return (self.eos_id is not None and self.tokens
@@ -100,6 +111,33 @@ class Scheduler:
             raise SchedulerFull(
                 f"waiting queue at capacity ({self.queue_capacity})")
         self.waiting.append(req)
+
+    def try_admit(self, req: Request, *, deadline: Optional[float] = None,
+                  retries: int = 8, backoff_s: float = 0.005,
+                  sleep: Callable[[float], None] = time.sleep,
+                  clock: Callable[[], float] = time.monotonic) -> bool:
+        """Bounded retry-with-backoff admission: ``submit`` with up to
+        ``retries`` attempts, doubling the sleep between them, giving up
+        once ``deadline`` seconds (when given) would be exceeded.  Returns
+        False instead of raising :class:`SchedulerFull` — the caller
+        applies upstream rejection, not an unbounded spin.  ``sleep`` and
+        ``clock`` are injectable so tests (and retry-counting callers)
+        never actually wait."""
+        t0 = clock()
+        delay = max(backoff_s, 0.0)
+        for attempt in range(max(1, retries)):
+            try:
+                self.submit(req)
+                return True
+            except SchedulerFull:
+                if attempt + 1 >= max(1, retries):
+                    return False
+                if deadline is not None \
+                        and clock() - t0 + delay > deadline:
+                    return False
+                sleep(delay)
+                delay = delay * 2 if delay > 0 else backoff_s
+        return False
 
     @property
     def queue_depth(self) -> int:

@@ -12,17 +12,29 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 @pytest.fixture(autouse=True)
 def _isolated_autotune_cache(tmp_path, monkeypatch):
-    """Keep autotune AND executable-plan persistence out of ~/.cache during
-    tests: every test gets private cache files and a fresh tuner on the
-    global registry."""
+    """Keep autotune, executable-plan AND quarantine persistence out of
+    ~/.cache during tests: every test gets private cache files, a fresh
+    tuner on the global registry, and no ambient chaos plan (tests opt in
+    via ``faults.inject``)."""
     monkeypatch.setenv("LILAC_AUTOTUNE_CACHE",
                        str(tmp_path / "autotune.json"))
     monkeypatch.setenv("LILAC_PLAN_CACHE", str(tmp_path / "plans.json"))
+    monkeypatch.setenv("LILAC_QUARANTINE_CACHE",
+                       str(tmp_path / "quarantine.json"))
+    monkeypatch.delenv("LILAC_FAULTS", raising=False)
+    monkeypatch.delenv("LILAC_FAULTS_SEED", raising=False)
+    monkeypatch.delenv("LILAC_SHADOW_RATE", raising=False)
+    from repro.core import faults
     from repro.core.harness import REGISTRY
     from repro.core.plan import reset_shared_plan_caches
+    from repro.core.resilience import reset_shared_quarantine
 
+    faults.load_env()          # LILAC_FAULTS just cleared -> ACTIVE = None
     REGISTRY.reset_autotuner()
     reset_shared_plan_caches()
+    reset_shared_quarantine()
     yield
+    faults.load_env()
     REGISTRY.reset_autotuner()
     reset_shared_plan_caches()
+    reset_shared_quarantine()

@@ -1,0 +1,478 @@
+"""Fail-safe acceleration (the robustness tier): chaos injection,
+contained execution, harness quarantine, shadow verification, and
+serving-tier fault eviction.
+
+The contract under test: ``lilac.compile(f)`` is *never worse* than
+``f`` — under ANY injected fault the user sees reference-correct
+numerics and zero exceptions; the failing (harness, variant) is
+quarantined and persisted so the next process does not re-trip it.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import lilac
+from repro.core import faults
+from repro.core.resilience import (QuarantineStore, outputs_close,
+                                   reset_shared_quarantine,
+                                   shared_quarantine)
+from repro.sparse import random_csr
+
+from test_serve import MockModel, _mock_engine, _solo_stream  # noqa: E402
+
+ROWS, COLS = 64, 48
+
+
+@pytest.fixture(scope="module")
+def problem():
+    csr = random_csr(ROWS, COLS, density=0.12, seed=1)
+    rng = np.random.default_rng(2)
+    vec = jnp.asarray(rng.standard_normal(COLS).astype(np.float32))
+    return csr, vec
+
+
+def naive_spmv(val, col, row_ptr, vec):
+    row = jnp.repeat(jnp.arange(ROWS, dtype=jnp.int32), jnp.diff(row_ptr),
+                     total_repeat_length=val.shape[0])
+    return jax.ops.segment_sum(val * vec[col], row, num_segments=ROWS)
+
+
+def _args(problem):
+    csr, vec = problem
+    return csr.val, csr.col_ind, csr.row_ptr, vec
+
+
+def _reference(problem):
+    return np.asarray(naive_spmv(*_args(problem)))
+
+
+def _assert_oracle(out, problem):
+    np.testing.assert_allclose(np.asarray(out), _reference(problem),
+                               atol=2e-4, rtol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fault harness mechanics
+# ---------------------------------------------------------------------------
+
+def test_parse_spec_grammar():
+    rules = faults.parse_spec(
+        "kernel_raise:pallas.ell:0.5, nan_output:* ,cache_torn_write")
+    assert [(r.kind, r.site, r.prob) for r in rules] == [
+        ("kernel_raise", "pallas.ell", 0.5),
+        ("nan_output", "*", 1.0),
+        ("cache_torn_write", "*", 1.0)]
+    with pytest.raises(faults.FaultSpecError):
+        faults.parse_spec("no_such_kind")
+    with pytest.raises(faults.FaultSpecError):
+        faults.parse_spec("kernel_raise:*:1.5")
+    with pytest.raises(faults.FaultSpecError):
+        faults.parse_spec("kernel_raise:*:zero")
+
+
+def test_fault_plan_is_deterministic():
+    """Same (seed, call sequence) -> identical fired log; the firing hash
+    has no RNG state to perturb."""
+    logs = []
+    for _ in range(2):
+        plan = faults.FaultPlan(faults.parse_spec("kernel_raise:*:0.5"),
+                                seed=7)
+        for _ in range(64):
+            plan.fires("kernel_raise", "pallas.ell")
+        logs.append(list(plan.fired))
+    assert logs[0] == logs[1]
+    assert 0 < len(logs[0]) < 64          # prob 0.5 actually thins
+    other = faults.FaultPlan(faults.parse_spec("kernel_raise:*:0.5"),
+                             seed=8)
+    for _ in range(64):
+        other.fires("kernel_raise", "pallas.ell")
+    assert other.fired != logs[0]
+
+
+def test_inject_restores_previous_plan():
+    assert faults.ACTIVE is None
+    with faults.inject("nan_output"):
+        assert faults.ACTIVE is not None
+        with faults.inject("kernel_raise") as inner:
+            assert faults.ACTIVE is inner
+        assert faults.ACTIVE is not None and faults.ACTIVE is not inner
+    assert faults.ACTIVE is None
+
+
+def test_site_pattern_addressing():
+    with faults.inject("kernel_raise:pallas.*") as plan:
+        assert not faults.check("kernel_raise", "jnp.segment")
+        with pytest.raises(faults.InjectedFault) as ei:
+            faults.fail("kernel_raise", "pallas.ell", slot=3)
+        assert ei.value.slot == 3 and ei.value.site == "pallas.ell"
+    assert plan.fired == [("kernel_raise", "pallas.ell", 0)]
+
+
+# ---------------------------------------------------------------------------
+# chaos sweep: every fault class -> oracle numerics, zero exceptions
+# ---------------------------------------------------------------------------
+
+CHAOS_SPECS = [
+    "kernel_raise:*",
+    "nan_output:*",
+    "marshal_raise:*",
+    "tune_raise:*",
+    "bake_raise:*",
+    "cache_torn_write:*",
+    ("kernel_raise:*:0.5,nan_output:*:0.3,marshal_raise:*:0.4,"
+     "tune_raise:*:0.5,bake_raise:*:0.5,cache_torn_write:*:0.5"),
+]
+
+
+@pytest.mark.parametrize("spec", CHAOS_SPECS)
+def test_chaos_sweep_is_oracle_correct(problem, spec):
+    """The acceptance gate in miniature: with the fault class active at
+    every site, compile + two calls (cold, steady-state) stay correct and
+    raise nothing user-visible."""
+    with faults.inject(spec, seed=3) as plan:
+        # autotune policy so tune-time injection sites are on the path too
+        fast = lilac.compile(naive_spmv, mode="host", policy="autotune")
+        _assert_oracle(fast(*_args(problem)), problem)
+        _assert_oracle(fast(*_args(problem)), problem)
+    info = fast.resilience_info()
+    if any(k in spec for k in ("kernel_raise", "nan_output")) \
+            and plan.fired:
+        # call-path faults must leave a containment trail
+        c = info["containment"]
+        assert c["contained_exceptions"] + c["nonfinite_outputs"] > 0
+        assert c["quarantines"] > 0
+
+
+def test_chaos_seeds_rotate(problem):
+    """The CI chaos gate rotates seeds; any seed must satisfy the same
+    contract."""
+    for seed in (0, 11, 29):
+        reset_shared_quarantine()
+        with faults.inject("kernel_raise:*:0.6,nan_output:*:0.4",
+                           seed=seed):
+            fast = lilac.compile(naive_spmv, mode="host")
+            _assert_oracle(fast(*_args(problem)), problem)
+
+
+def test_chaos_hypothesis_sweep(problem):
+    """Property form of the sweep: random rule subsets, probabilities and
+    seeds never break the containment contract."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    core_kinds = ["kernel_raise", "nan_output", "marshal_raise",
+                  "tune_raise", "bake_raise", "cache_torn_write"]
+
+    @settings(max_examples=8, deadline=None)
+    @given(kinds=st.sets(st.sampled_from(core_kinds), min_size=1),
+           prob=st.floats(0.2, 1.0),
+           seed=st.integers(0, 2 ** 16))
+    def check(kinds, prob, seed):
+        reset_shared_quarantine()
+        spec = ",".join(f"{k}:*:{prob:.3f}" for k in sorted(kinds))
+        with faults.inject(spec, seed=seed):
+            fast = lilac.compile(naive_spmv, mode="host")
+            _assert_oracle(fast(*_args(problem)), problem)
+
+    check()
+
+
+def test_all_candidates_quarantined_still_correct(problem):
+    """Even a quarantine store that already bans every harness leaves the
+    reference path: the floor is the un-rewritten program, not an error."""
+    q = shared_quarantine()
+    for comp in ("spmv_csr",):
+        for h in lilac.REGISTRY.harnesses_for(comp):
+            q.add(comp, h.name, reason="test: pre-banned")
+    fast = lilac.compile(naive_spmv, mode="host")
+    _assert_oracle(fast(*_args(problem)), problem)
+
+
+# ---------------------------------------------------------------------------
+# quarantine store
+# ---------------------------------------------------------------------------
+
+def test_quarantine_persistence_roundtrip(tmp_path):
+    path = tmp_path / "q.json"
+    q1 = QuarantineStore(path)
+    key = q1.add("spmv_csr", "pallas.ell", "r64|fused",
+                 reason="exception: boom", site="pallas.ell")
+    assert q1.is_quarantined("spmv_csr", "pallas.ell", "r64|fused")
+    assert not q1.is_quarantined("spmv_csr", "pallas.ell")   # other variant
+    # a fresh store (fresh process) sees the persisted record
+    q2 = QuarantineStore(path)
+    assert q2.is_quarantined("spmv_csr", "pallas.ell", "r64|fused")
+    rec = q2.active()[key]
+    assert rec["reason"].startswith("exception: boom")
+    assert rec["site"] == "pallas.ell" and rec["ttl"] > 0
+
+
+def test_quarantine_ttl_expiry(tmp_path):
+    q = QuarantineStore(tmp_path / "q.json")
+    q.add("c", "h", reason="transient", ttl=1e-9)
+    q.add("c", "h2", reason="permanent", ttl=-1.0)     # <= 0: never expires
+    assert not q.is_quarantined("c", "h")              # lazily purged
+    assert q.stats.expired == 1
+    assert q.is_quarantined("c", "h2")
+    assert list(q.active()) == [q.key_of("c", "h2")]
+
+
+def test_quarantine_survives_torn_write(tmp_path):
+    """cache_torn_write at the quarantine store itself: the truncated file
+    is sidecar-quarantined and the next reader starts fresh — corrupt
+    persistence degrades, never crashes."""
+    path = tmp_path / "quarantine.json"
+    with faults.inject("cache_torn_write:quarantine"):
+        QuarantineStore(path).add("c", "h", reason="x")
+    with pytest.raises(json.JSONDecodeError):
+        json.loads(path.read_text())                   # really torn
+    q2 = QuarantineStore(path)
+    assert not q2.is_quarantined("c", "h")
+    assert q2.stats.corrupt_recoveries == 1
+    assert path.with_suffix(".json.corrupt").exists()
+    q2.add("c", "h2", reason="y")                      # store writable again
+    assert QuarantineStore(path).is_quarantined("c", "h2")
+
+
+def test_autotune_cache_torn_write_recovery(tmp_path, problem):
+    """Satellite: the autotune cache recovers from a torn JSON file and
+    counts the recovery."""
+    from repro.core.autotune import AutotuneCache
+    path = os.environ["LILAC_AUTOTUNE_CACHE"]
+    with faults.inject("cache_torn_write:autotune"):
+        fast = lilac.compile(naive_spmv, mode="host", policy="autotune")
+        _assert_oracle(fast(*_args(problem)), problem)
+    assert os.path.exists(path)
+    store = AutotuneCache(path, registry_fingerprint="")
+    store.load()
+    assert store.stats.corrupt_recoveries == 1
+    assert os.path.exists(path + ".corrupt")
+
+
+def test_plan_cache_torn_write_recovery(problem):
+    from repro.core.plan import PlanCache
+    path = os.environ["LILAC_PLAN_CACHE"]
+    with faults.inject("cache_torn_write:plans"):
+        fast = lilac.compile(naive_spmv, mode="host")
+        _assert_oracle(fast(*_args(problem)), problem)
+    if os.path.exists(path):                  # plan persistence happened
+        store = PlanCache(path, registry_fingerprint="")
+        store.load()
+        assert store.stats.corrupt_recoveries == 1
+
+
+# ---------------------------------------------------------------------------
+# shadow verification
+# ---------------------------------------------------------------------------
+
+def test_outputs_close():
+    a = np.arange(4.0, dtype=np.float32)
+    assert outputs_close(a, a + 1e-7)
+    assert not outputs_close(a, a + 1.0)
+    assert not outputs_close((a, a), (a,))
+    bad = a.copy()
+    bad[1] = np.nan
+    assert not outputs_close(bad, a)          # NaN only in accelerated out
+    assert outputs_close(bad, bad)            # NaN matching reference is ok
+    assert outputs_close(np.array([1, 2]), np.array([1, 2]))
+    assert not outputs_close(np.array([1, 2]), np.array([1, 3]))
+
+
+def test_shadow_rate_zero_never_checks(problem):
+    fast = lilac.compile(naive_spmv, mode="host")
+    for _ in range(4):
+        fast(*_args(problem))
+    info = fast.resilience_info()
+    assert info["shadow_rate"] == 0.0
+    assert info["containment"]["shadow_checks"] == 0
+
+
+def test_shadow_sampling_rate(problem, monkeypatch):
+    monkeypatch.setenv("LILAC_SHADOW_RATE", "0.25")
+    fast = lilac.compile(naive_spmv, mode="host")
+    fast(*_args(problem))                     # cold call tunes + bakes
+    for _ in range(8):                        # 8 plan dispatches
+        _assert_oracle(fast(*_args(problem)), problem)
+    assert fast.resilience_info()["containment"]["shadow_checks"] == 2
+
+
+def test_shadow_divergence_quarantines_and_retunes(problem, monkeypatch):
+    """A plan whose output drifts from the reference is caught by the
+    sampled shadow, its selections are quarantined, and the function
+    re-tunes onto a correct configuration — the divergent answer is never
+    served."""
+    monkeypatch.setenv("LILAC_SHADOW_RATE", "1.0")
+    fast = lilac.compile(naive_spmv, mode="host")
+    _assert_oracle(fast(*_args(problem)), problem)     # tune + bake
+    sane = fast._dispatch_plan
+
+    def drifted(plan, leaves):
+        return jax.tree.map(lambda x: x + 1.0, sane(plan, leaves))
+
+    monkeypatch.setattr(fast, "_dispatch_plan", drifted)
+    out = fast(*_args(problem))               # divergence caught here
+    _assert_oracle(out, problem)              # the REFERENCE is served
+    info = fast.resilience_info()
+    assert info["containment"]["shadow_divergences"] == 1
+    assert info["quarantine_active"] >= 1
+    monkeypatch.setattr(fast, "_dispatch_plan", sane)
+    _assert_oracle(fast(*_args(problem)), problem)     # re-tuned + correct
+    assert fast.resilience_info()["containment"]["shadow_divergences"] == 1
+
+
+# ---------------------------------------------------------------------------
+# serving tier
+# ---------------------------------------------------------------------------
+
+def test_try_admit_backoff_and_deadline():
+    from repro.serve import Request, Scheduler
+    s = Scheduler(2, queue_capacity=1)
+    s.submit(Request(prompt=np.array([1]), max_new_tokens=1))
+    sleeps = []
+    ok = s.try_admit(Request(prompt=np.array([1]), max_new_tokens=1),
+                     deadline=10.0, retries=4, backoff_s=0.01,
+                     sleep=sleeps.append, clock=lambda: 0.0)
+    assert not ok and sleeps == [0.01, 0.02, 0.04]     # bounded, doubling
+    # deadline cuts the retry budget short
+    t = iter([0.0, 0.0, 5.0]).__next__
+    sleeps2 = []
+    ok = s.try_admit(Request(prompt=np.array([1]), max_new_tokens=1),
+                     deadline=1.0, retries=8, backoff_s=0.01,
+                     sleep=sleeps2.append, clock=t)
+    assert not ok and len(sleeps2) <= 1
+    # a slot freeing mid-backoff lets the admit succeed
+    calls = {"n": 0}
+
+    def freeing_sleep(dt):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            s.waiting.popleft()
+
+    ok = s.try_admit(Request(prompt=np.array([1]), max_new_tokens=1),
+                     retries=8, backoff_s=0.001, sleep=freeing_sleep,
+                     clock=lambda: 0.0)
+    assert ok and calls["n"] == 2
+
+
+def test_poisoned_request_evicted_survivors_bit_identical():
+    """A decode fault evicts ONLY the poisoned request; every surviving
+    stream matches its solo reference bit for bit (seed 0 of the chaos
+    plan fails some requests and spares others — both sets non-empty)."""
+    from repro.serve import Request
+    eng = _mock_engine(batch=(4,), seq=(64,))
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(1, 50, size=4).astype(np.int32),
+                    max_new_tokens=6) for _ in range(4)]
+    with faults.inject("decode_raise:decode:0.15,decode_nan:decode:0.1",
+                       seed=0):
+        for r in reqs:
+            assert eng.submit(r)
+        finished = eng.run_until_idle()
+    assert len(finished) == len(reqs)         # everyone terminates
+    failed = [r for r in reqs if r.failed]
+    survived = [r for r in reqs if r.failed is None]
+    assert failed and survived
+    for r in survived:
+        assert list(r.tokens) == _solo_stream(list(r.prompt),
+                                              r.max_new_tokens)
+    snap = eng.metrics.snapshot()
+    res = snap["resilience"]
+    assert res["decode_faults"] >= len(failed)
+    assert res["fault_evictions"] == len(failed)
+
+
+def test_decode_fault_reasons_are_recorded():
+    eng = _mock_engine(batch=(2,), seq=(64,))
+    from repro.serve import Request
+    r1 = Request(prompt=np.array([3, 4], np.int32), max_new_tokens=4)
+    with faults.inject("decode_raise:decode"):
+        eng.submit(r1)
+        eng.run_until_idle()
+    assert r1.failed is not None and r1.failed.startswith("decode:")
+    eng2 = _mock_engine(batch=(2,), seq=(64,))
+    r2 = Request(prompt=np.array([3, 4], np.int32), max_new_tokens=4)
+    with faults.inject("decode_nan:decode"):
+        eng2.submit(r2)
+        eng2.run_until_idle()
+    assert r2.failed == "non-finite decode logits"
+
+
+def test_deadline_evicts_active_and_waiting():
+    """Requests past their deadline are evicted (active: via compaction;
+    waiting: dropped from the queue) and counted separately."""
+    now = {"t": 1.0}
+    cfg_clock = lambda: now["t"]                              # noqa: E731
+    from repro.serve import BucketPolicy, Request, ServeConfig
+    from repro.serve.engine import Engine
+    cfg = ServeConfig(buckets=BucketPolicy(batch=(1,), seq=(64,)),
+                      use_lilac=False, jit_prefill=False, deadline_s=5.0)
+    eng = Engine(MockModel(), params=None, config=cfg, clock=cfg_clock)
+    r_active = Request(prompt=np.array([1, 2], np.int32),
+                       max_new_tokens=50)
+    r_waiting = Request(prompt=np.array([3], np.int32), max_new_tokens=50)
+    assert eng.submit(r_active) and eng.submit(r_waiting)
+    assert r_active.deadline_s == 5.0                  # config default
+    eng.step()                                         # admits r_active only
+    assert eng.scheduler.n_active == 1
+    now["t"] = 7.0                                     # both past deadline
+    eng.run_until_idle()
+    assert r_active.failed == "deadline"
+    assert r_waiting.failed == "deadline"
+    assert not eng.scheduler.waiting
+    res = eng.metrics.snapshot()["resilience"]
+    assert res["deadline_evictions"] == 2
+    assert res["fault_evictions"] == 2
+
+
+def test_engine_admit_deadline_uses_try_admit():
+    """config.admit_deadline_s routes submission through bounded
+    retry-with-backoff and records timeouts instead of raising."""
+    eng = _mock_engine(batch=(1,), seq=(64,), queue_capacity=1,
+                       admit_deadline_s=0.02)
+    import time
+    from repro.serve import Request
+    assert eng.submit(Request(prompt=np.array([1], np.int32),
+                              max_new_tokens=2))
+    t0 = time.perf_counter()
+    ok = eng.submit(Request(prompt=np.array([2], np.int32),
+                            max_new_tokens=2))
+    dt = time.perf_counter() - t0
+    assert not ok and dt < 5.0                         # bounded, not a spin
+    res = eng.metrics.snapshot()["resilience"]
+    assert res["admission_timeouts"] == 1
+    assert res["admission_retries"] >= 1
+    assert eng.metrics.rejected == 1
+
+
+def test_serving_chaos_hypothesis():
+    """Property: under random decode-fault plans, batching terminates,
+    nothing escapes, and every survivor matches its solo stream."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2 ** 16),
+           p_raise=st.floats(0.0, 0.4), p_nan=st.floats(0.0, 0.4))
+    def check(seed, p_raise, p_nan):
+        from repro.serve import Request
+        eng = _mock_engine(batch=(2, 4), seq=(64,))
+        rng = np.random.default_rng(seed)
+        reqs = [Request(prompt=rng.integers(1, 50, size=3).astype(np.int32),
+                        max_new_tokens=5) for _ in range(5)]
+        spec = (f"decode_raise:decode:{p_raise:.3f},"
+                f"decode_nan:decode:{p_nan:.3f}")
+        with faults.inject(spec, seed=seed):
+            for r in reqs:
+                assert eng.submit(r)
+            eng.run_until_idle()
+        for r in reqs:
+            assert r.done
+            if r.failed is None:
+                assert list(r.tokens) == _solo_stream(list(r.prompt),
+                                                      r.max_new_tokens)
+
+    check()

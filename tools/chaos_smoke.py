@@ -1,0 +1,191 @@
+"""Chaos-smoke gate: the whole quick path under active fault injection.
+
+Drives three surfaces with ``LILAC_FAULTS``-style chaos plans active —
+
+1. a **targeted oracle sweep**: every quick-suite problem compiled under a
+   combined fault spec (kernel raises, NaN outputs, marshal/tune/bake
+   raises, torn cache writes), outputs compared elementwise against the
+   un-rewritten reference;
+2. ``benchmarks/tab2_backends.py --quick`` — the backend sweep completes
+   under chaos;
+3. ``benchmarks/serving.py --quick`` — continuous batching completes with
+   decode faults poisoning individual requests.
+
+Gates (exit 1 on any failure):
+
+* ``zero_uncontained_exceptions`` — nothing escapes to the caller;
+* ``results_match_oracle`` — every sweep output is reference-correct;
+* ``quarantines_persisted`` — the incidents the faults provoked are on
+  disk for the next process.
+
+Seeds rotate (``--seed``; CI passes the run number) so successive runs
+exercise different fault interleavings while each run stays exactly
+reproducible.  All persistent caches are redirected into a scratch
+directory: a chaos run must never poison the perf caches other jobs
+share.
+
+CLI:
+    python tools/chaos_smoke.py [--seed N] [--out PATH] [--skip-benchmarks]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+CHAOS_SPEC = ("kernel_raise:*:0.4,nan_output:*:0.3,marshal_raise:*:0.3,"
+              "tune_raise:*:0.4,bake_raise:*:0.4,cache_torn_write:*:0.5")
+SERVE_SPEC = "decode_raise:decode:0.1,decode_nan:decode:0.1"
+
+
+def _redirect_caches(scratch: str):
+    os.environ["LILAC_AUTOTUNE_CACHE"] = os.path.join(scratch,
+                                                      "autotune.json")
+    os.environ["LILAC_PLAN_CACHE"] = os.path.join(scratch, "plans.json")
+    os.environ["LILAC_QUARANTINE_CACHE"] = os.path.join(scratch,
+                                                        "quarantine.json")
+
+
+def oracle_sweep(seed: int) -> dict:
+    """Compile + call every quick problem under the combined chaos spec;
+    compare against the un-rewritten reference."""
+    import numpy as np
+    from benchmarks.common import naive_spmv_fn, problem_suite, vec_for
+    from repro import lilac
+    from repro.core import faults
+
+    out = {"problems": {}, "uncontained": [], "mismatches": [],
+           "faults_fired": 0, "quarantines": 0, "fallbacks": 0}
+    for name, csr in problem_suite(quick=True).items():
+        naive = naive_spmv_fn(csr.rows, csr.nnz)
+        vec = vec_for(csr)
+        a = (csr.val, csr.col_ind, csr.row_ptr, vec)
+        ref = np.asarray(naive(*a))
+        rec = {"fired": 0, "ok": False}
+        try:
+            with faults.inject(CHAOS_SPEC, seed=seed) as plan:
+                fast = lilac.compile(naive, mode="host", policy="autotune")
+                got = np.asarray(fast(*a))
+                got2 = np.asarray(fast(*a))       # steady state too
+            rec["fired"] = len(plan.fired)
+            out["faults_fired"] += len(plan.fired)
+            info = fast.resilience_info()
+            rec["containment"] = info["containment"]
+            out["quarantines"] += info["containment"]["quarantines"]
+            out["fallbacks"] += info["containment"]["fallbacks"]
+            match = (np.allclose(got, ref, atol=2e-4, rtol=2e-4)
+                     and np.allclose(got2, ref, atol=2e-4, rtol=2e-4))
+            rec["ok"] = bool(match)
+            if not match:
+                out["mismatches"].append(name)
+        except Exception:
+            out["uncontained"].append(
+                {"problem": name, "traceback": traceback.format_exc()})
+        out["problems"][name] = rec
+    return out
+
+
+def benchmark_sweeps(seed: int) -> dict:
+    """tab2 + serving quick runs under chaos: completing without an
+    exception IS the gate; their own perf gates are not graded here
+    (faults legitimately change selections and timings)."""
+    from repro.core import faults
+
+    out = {}
+    try:
+        from benchmarks import tab2_backends
+        with faults.inject(CHAOS_SPEC, seed=seed) as plan:
+            r = tab2_backends.run(reps=2, quick=True, out=None)
+        out["tab2"] = {"ok": True, "fired": len(plan.fired),
+                       "problems": len(r.get("problems", r.get("table", {})))}
+    except Exception:
+        out["tab2"] = {"ok": False, "traceback": traceback.format_exc()}
+    try:
+        from benchmarks import serving
+        with faults.inject(SERVE_SPEC, seed=seed) as plan:
+            r = serving.run(quick=True, n_requests=6, out=None)
+        res = r["continuous"]["resilience"]
+        out["serving"] = {"ok": True, "fired": len(plan.fired),
+                          "decode_faults": res["decode_faults"],
+                          "fault_evictions": res["fault_evictions"],
+                          "finished": r["continuous"]["finished"]}
+    except Exception:
+        out["serving"] = {"ok": False, "traceback": traceback.format_exc()}
+    return out
+
+
+def run(seed: int = 0, out_path: str | None = None,
+        skip_benchmarks: bool = False, scratch: str | None = None) -> dict:
+    scratch = scratch or tempfile.mkdtemp(prefix="lilac-chaos-")
+    _redirect_caches(scratch)
+
+    report = {"benchmark": "chaos_smoke", "seed": seed,
+              "spec": CHAOS_SPEC, "serve_spec": SERVE_SPEC,
+              "scratch": scratch}
+    report["oracle_sweep"] = oracle_sweep(seed)
+    if not skip_benchmarks:
+        report["benchmarks"] = benchmark_sweeps(seed)
+
+    sweep = report["oracle_sweep"]
+    benches = report.get("benchmarks", {})
+    report["zero_uncontained_exceptions"] = (
+        not sweep["uncontained"]
+        and all(b.get("ok") for b in benches.values()))
+    report["results_match_oracle"] = (
+        not sweep["mismatches"]
+        and all(p["ok"] for p in sweep["problems"].values()))
+
+    # quarantine persistence: the incidents this run provoked must be on
+    # disk, readable by a FRESH store (what the next process sees)
+    from repro.core.resilience import QuarantineStore
+    q = QuarantineStore(os.environ["LILAC_QUARANTINE_CACHE"])
+    persisted = len(q.active())
+    report["quarantine_records_on_disk"] = persisted
+    report["quarantines_persisted"] = (
+        persisted >= 1 if sweep["quarantines"] else True)
+
+    report["passed"] = (report["zero_uncontained_exceptions"]
+                        and report["results_match_oracle"]
+                        and report["quarantines_persisted"])
+    print(f"chaos_smoke seed={seed}: fired={sweep['faults_fired']} "
+          f"quarantines={sweep['quarantines']} "
+          f"fallbacks={sweep['fallbacks']} persisted={persisted}")
+    for gate in ("zero_uncontained_exceptions", "results_match_oracle",
+                 "quarantines_persisted"):
+        print(f"  {gate}: {report[gate]}")
+    for u in sweep["uncontained"]:
+        print(f"UNCONTAINED in {u['problem']}:\n{u['traceback']}",
+              file=sys.stderr)
+    for name, b in benches.items():
+        if not b.get("ok"):
+            print(f"BENCHMARK {name} failed:\n{b.get('traceback')}",
+                  file=sys.stderr)
+    if out_path:
+        from benchmarks.common import write_json_report
+        write_json_report(out_path, report)
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int,
+                    default=int(os.environ.get("CHAOS_SEED", "0") or 0),
+                    help="fault-plan seed (CI rotates via run number)")
+    ap.add_argument("--out", default="BENCH_chaos.json",
+                    help="JSON report path ('' to skip)")
+    ap.add_argument("--skip-benchmarks", action="store_true",
+                    help="oracle sweep only (fast local check)")
+    args = ap.parse_args(argv)
+    report = run(seed=args.seed, out_path=args.out or None,
+                 skip_benchmarks=args.skip_benchmarks)
+    return 0 if report["passed"] else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
