@@ -1,6 +1,6 @@
 """Serving-tier benchmark: continuous vs static batching on baked plans.
 
-Three measurements over a smoke-sized causal LM (CPU-honest; the point is
+Five measurements over a smoke-sized causal LM (CPU-honest; the point is
 scheduler + dispatch behavior, not kernel FLOPs):
 
 1. **continuous vs static batching** — the same deterministic closed-burst
@@ -25,6 +25,24 @@ scheduler + dispatch behavior, not kernel FLOPs):
    fraction and the timing ratio (recorded, not gated — interpret-mode
    kernel timings off-TPU are not meaningful thresholds).
 
+4. **Poisson saturation curve** — a 2-replica front door driven at
+   increasing ``SyntheticWorkload(rate_rps=...)`` offered loads; records
+   achieved throughput, TTFT and time-per-token percentiles per rate
+   (recorded, not gated — CPU-host absolute latencies are not
+   thresholds).
+
+5. **front-door chaos** — 3 replicas under Poisson load with
+   ``decode_raise`` + ``decode_nan`` firing; one replica is killed
+   mid-burst with the ``replica_crash`` fault kind.  Gates:
+   ``all_requests_accounted_for`` (every submitted request finished or
+   failed with an attributed reason — zero silent drops),
+   ``failover_zero_uncontained`` (exactly the injected failure, nothing
+   escaped the front door), ``survivors_bit_identical_to_solo``
+   (finished streams replay exactly on a solo engine), and — from a
+   forced ``shadow_diverge`` incident — ``shadow_rate_spikes_and_decays``
+   (the request-shadow rate spikes >= 8x its floor, then decays below 2x
+   within the clean-streak window).
+
 CLI:
     python benchmarks/serving.py [--quick] [--arch NAME]
                                  [--n-requests N] [--out PATH]
@@ -32,7 +50,13 @@ CLI:
 from __future__ import annotations
 
 import argparse
+import contextlib
+import math
+import os
 import platform as _platform
+import tempfile
+import time
+from collections import deque
 
 import jax
 import numpy as np
@@ -41,9 +65,9 @@ from benchmarks.common import emit, percentiles, timeit, write_json_report
 from benchmarks.dispatch_overhead import _spy_detect
 from repro.configs.base import get_arch, smoke_config
 from repro.models.factory import build_model
-from repro.serve import (BucketPolicy, Engine, Request, ServeConfig,
-                         SyntheticWorkload, moe_ffn_padded, moe_ffn_ragged,
-                         padding_waste)
+from repro.serve import (BucketPolicy, Engine, FrontDoor, Request,
+                         ServeConfig, SyntheticWorkload, moe_ffn_padded,
+                         moe_ffn_ragged, padding_waste)
 
 
 def _quick_policy() -> BucketPolicy:
@@ -113,6 +137,245 @@ def _measure_packing(quick: bool) -> dict:
         "t_padded_s": t_padded,
         "padded_vs_ragged": t_padded / t_ragged,
     }
+
+
+@contextlib.contextmanager
+def _scratch_quarantine():
+    """Redirect the shared quarantine store to a throwaway file: the
+    chaos measurements deliberately quarantine healthy kernels (forced
+    divergence), which must not poison the ambient store other CI steps
+    and later benchmarks read."""
+    from repro.core import resilience as RES
+    prev = os.environ.get("LILAC_QUARANTINE_CACHE")
+    with tempfile.TemporaryDirectory(prefix="lilac-chaos-q-") as d:
+        os.environ["LILAC_QUARANTINE_CACHE"] = os.path.join(
+            d, "quarantine.json")
+        RES.reset_shared_quarantine()
+        try:
+            yield
+        finally:
+            if prev is None:
+                os.environ.pop("LILAC_QUARANTINE_CACHE", None)
+            else:
+                os.environ["LILAC_QUARANTINE_CACHE"] = prev
+            RES.reset_shared_quarantine()
+
+
+def _drive(fd: FrontDoor, pairs, *, on_step=None, max_steps=200_000):
+    """FrontDoor.run with a per-step hook (the chaos measurement uses it
+    to fire the mid-burst crash and to poll the shadow controller)."""
+    pending = deque(sorted(pairs, key=lambda ar: ar[0]))
+    start = time.perf_counter()
+    steps = 0
+    while pending or not fd.idle:
+        now = time.perf_counter() - start
+        while pending and pending[0][0] <= now:
+            _, req = pending.popleft()
+            fd.submit(req)
+        if fd.idle:
+            if pending:
+                wait = pending[0][0] - (time.perf_counter() - start)
+                if wait > 0:
+                    time.sleep(min(wait, 0.05))
+            continue
+        fd.step()
+        steps += 1
+        if on_step is not None:
+            on_step(steps)
+        if steps > max_steps:
+            raise RuntimeError(f"fleet did not drain in {max_steps} steps")
+    return time.perf_counter() - start
+
+
+def _measure_saturation(model, params, policy, quick, vocab, grid,
+                        max_new) -> dict:
+    rates = (60.0, 240.0) if quick else (30.0, 120.0, 480.0)
+    n = 8 if quick else 24
+    cfg = ServeConfig(buckets=policy, prefill_lengths=grid,
+                      admit_deadline_s=0.05)
+    points = []
+    for rate in rates:
+        fd = FrontDoor([Engine(model, params, cfg) for _ in range(2)])
+        wl = SyntheticWorkload(n_requests=n, vocab=vocab, prompt_grid=grid,
+                               new_tokens=max_new, rate_rps=rate, seed=3)
+        pairs = wl.requests()
+        reqs = [r for _, r in pairs]
+        wall = _drive(fd, pairs)
+        snap = fd.snapshot()
+        tpt = [r.time_per_token() for r in reqs
+               if r.time_per_token() is not None]
+        ttft = [r.ttft_s for r in reqs if r.ttft_s is not None]
+        toks = snap["fleet"]["tokens_generated"]
+        points.append({
+            "offered_rps": rate,
+            "achieved_rps": (snap["fleet"]["finished"] / wall
+                             if wall > 0 else float("nan")),
+            "tokens_per_s": toks / wall if wall > 0 else float("nan"),
+            "ttft_s": percentiles(ttft),
+            "time_per_token_s": percentiles(tpt),
+            "finished": snap["fleet"]["finished"],
+            "rejected": snap["fleet"]["rejected"],
+            "accounted": snap["fleet"]["all_requests_accounted_for"],
+        })
+        emit("serving.saturation", points[-1]["tokens_per_s"],
+             f"offered={rate:g}rps ttft_p99="
+             f"{points[-1]['ttft_s']['p99'] * 1e3:.1f}ms")
+    return {"n_requests": n, "replicas": 2, "points": points,
+            "all_rates_accounted": all(p["accounted"] for p in points)}
+
+
+def _measure_frontdoor_chaos(model, params, policy, quick, vocab, grid,
+                             max_new, seed: int = 0) -> dict:
+    """3-replica fleet under Poisson load + decode faults; replica 1 is
+    killed mid-burst via replica_crash.  See module docstring, item 5."""
+    from repro.core import faults
+    n = 12 if quick else 30
+    cfg = ServeConfig(buckets=policy, prefill_lengths=grid,
+                      admit_deadline_s=0.05, request_shadow_rate=0.25)
+    engines = [Engine(model, params, cfg) for _ in range(3)]
+    fd = FrontDoor(engines)
+    wl = SyntheticWorkload(n_requests=n, vocab=vocab, prompt_grid=grid,
+                           new_tokens=max_new,
+                           rate_rps=200.0 if quick else 120.0, seed=seed)
+    pairs = wl.requests()
+    reqs = [r for _, r in pairs]
+    crashed = [False]
+    fired_kinds = set()
+
+    def on_step(_steps):
+        # mid-burst: once a third of the work is done (and more is still
+        # arriving / in flight), kill replica 1
+        if not crashed[0] \
+                and sum(r.done for r in reqs) * 3 >= n:
+            crashed[0] = True
+            with faults.inject("replica_crash:replica1",
+                               seed=seed) as crash_plan:
+                fd.step()
+            fired_kinds.update(k for k, _, _ in crash_plan.fired)
+
+    with faults.inject("decode_raise:decode:0.04,decode_nan:decode:0.04",
+                       seed=seed) as plan:
+        _drive(fd, pairs, on_step=on_step)
+    fired_kinds.update(k for k, _, _ in plan.fired)
+
+    # verification happens OUTSIDE any fault context.  Every finished
+    # stream must replay bit-identically solo: all of them via the
+    # survivor's replay_solo (same prewarmed plans, no rebuild), plus a
+    # small sample through a fully fresh generate_solo engine.
+    survivor = fd.healthy_replicas()[0].engine
+    finished = [r for r in reqs if r.done and r.failed is None]
+    mismatches = 0
+    mismatch_detail = []
+
+    def _record_mismatch(r, solo, how):
+        div = next((i for i, (a, b) in enumerate(zip(solo, r.tokens))
+                    if a != b), min(len(solo), len(r.tokens)))
+        mismatch_detail.append({
+            "how": how, "rid": r.rid,
+            "replica": fd.assignment.get(r.rid),
+            "prompt_len": r.prompt_len, "n_tokens": len(r.tokens),
+            "first_divergence": div,
+            "served": [int(t) for t in r.tokens],
+            "solo": [int(t) for t in solo],
+        })
+
+    for r in finished:
+        solo = survivor.replay_solo(r)
+        if solo != list(r.tokens):
+            mismatches += 1
+            _record_mismatch(r, solo, "replay_solo")
+    for r in finished[:3]:
+        solo = survivor.generate_solo(r.prompt, r.max_new_tokens,
+                                      eos_id=r.eos_id)
+        if solo != list(r.tokens):
+            mismatches += 1
+            _record_mismatch(r, solo, "generate_solo")
+    snap = fd.snapshot()
+    out = {
+        "n_requests": n,
+        "injected_kinds": sorted(fired_kinds),
+        "crash_fired": crashed[0] and "replica_crash" in fired_kinds,
+        "failovers": fd.failovers,
+        "redistributed": fd.redistributed,
+        "replica_lost": fd.lost,
+        "healthy_after": len(fd.healthy_replicas()),
+        "finished": len(finished),
+        "failed_reasons": snap["fleet"]["failed_reasons"],
+        "decode_faults": snap["resilience"]["decode_faults"],
+        "request_shadow_checks":
+            snap["resilience"]["request_shadow_checks"],
+        "request_shadow_divergences":
+            snap["resilience"]["request_shadow_divergences"],
+        "solo_mismatches": mismatches,
+        "mismatch_detail": mismatch_detail,
+        "all_requests_accounted_for": fd.accounted(),
+        "survivors_bit_identical_to_solo": (len(finished) > 0
+                                            and mismatches == 0),
+        "failover_zero_uncontained": (crashed[0]
+                                      and "replica_crash" in fired_kinds
+                                      and fd.failovers == 1
+                                      and len(fd.healthy_replicas()) == 2),
+    }
+    emit("serving.chaos", float(len(finished)),
+         f"failovers={fd.failovers} redistributed={fd.redistributed} "
+         f"lost={fd.lost} accounted={out['all_requests_accounted_for']} "
+         f"solo_mismatch={mismatches}")
+    return out
+
+
+def _measure_adaptive_shadow(model, params, policy, quick, vocab, grid,
+                             seed: int = 0) -> dict:
+    """Forced shadow_diverge incident on a served request: the effective
+    request-shadow rate must spike >= 8x its floor, then decay below 2x
+    within the clean-streak window (ceil(log(spike/2)/log(1/decay)) + 1
+    clean checks)."""
+    from repro.core import faults
+    from repro.core import resilience as RES
+    cfg = ServeConfig(buckets=policy, prefill_lengths=grid,
+                      request_shadow_rate=1.0)
+    eng = Engine(model, params, cfg)
+    fd = FrontDoor([eng])
+    shadow = eng._request_shadow
+
+    def _wl(n, s):
+        return SyntheticWorkload(n_requests=n, vocab=vocab,
+                                 prompt_grid=grid, new_tokens=(3, 6),
+                                 rate_rps=0.0, seed=s).requests()
+
+    # one diverged request is enough: inject over a single-request burst
+    with faults.inject("shadow_diverge:request", seed=seed):
+        _drive(fd, _wl(1, seed + 100))
+    peak = shadow.peak_multiplier
+    checks_at_spike = shadow.checks
+    window = math.ceil(math.log(max(RES.shadow_spike() / 2.0, 1.0))
+                       / math.log(1.0 / RES.shadow_decay())) + 1
+    # clean traffic decays the spike; count the checks it takes
+    checks_to_recover = None
+    for burst in range(4):
+        _drive(fd, _wl(window, seed + 200 + burst))
+        if shadow.multiplier < 2.0:
+            checks_to_recover = shadow.checks - checks_at_spike
+            break
+    snap = shadow.snapshot()
+    out = {
+        "floor": snap["floor"],
+        "spike": snap["spike"],
+        "decay": snap["decay"],
+        "peak_multiplier": peak,
+        "final_multiplier": snap["multiplier"],
+        "incidents": snap["incidents"],
+        "clean_window": window,
+        "checks_to_recover": checks_to_recover,
+        "shadow_rate_spikes_and_decays": (
+            peak >= 8.0
+            and snap["multiplier"] < 2.0
+            and checks_to_recover is not None
+            and checks_to_recover <= window),
+    }
+    emit("serving.adaptive_shadow", peak,
+         f"peak={peak:g}x decay_in={checks_to_recover} "
+         f"(window={window}) ok={out['shadow_rate_spikes_and_decays']}")
+    return out
 
 
 def run(quick: bool = False, arch: str = "olmoe-1b-7b",
@@ -201,6 +464,26 @@ def run(quick: bool = False, arch: str = "olmoe-1b-7b",
          f"waste={report['packing']['padding_waste']:.2f} "
          f"padded/ragged={report['packing']['padded_vs_ragged']:.2f}x "
          f"match={report['packing']['packed_matches_padded']}")
+
+    # 4. Poisson saturation curve through the front door ------------------
+    report["saturation"] = _measure_saturation(
+        model, params, policy, quick, cfg.vocab, grid, max_new)
+
+    # 5. front-door chaos + adaptive shadow (scratch quarantine: forced
+    # divergence must not poison the ambient incident store) --------------
+    with _scratch_quarantine():
+        report["frontdoor_chaos"] = _measure_frontdoor_chaos(
+            model, params, policy, quick, cfg.vocab, grid, max_new)
+        report["adaptive_shadow"] = _measure_adaptive_shadow(
+            model, params, policy, quick, cfg.vocab, grid)
+    report["all_requests_accounted_for"] = \
+        report["frontdoor_chaos"]["all_requests_accounted_for"]
+    report["failover_zero_uncontained"] = \
+        report["frontdoor_chaos"]["failover_zero_uncontained"]
+    report["survivors_bit_identical_to_solo"] = \
+        report["frontdoor_chaos"]["survivors_bit_identical_to_solo"]
+    report["shadow_rate_spikes_and_decays"] = \
+        report["adaptive_shadow"]["shadow_rate_spikes_and_decays"]
 
     if out:
         write_json_report(out, report)

@@ -18,6 +18,8 @@ Fault classes (the ``kind`` namespace)::
     cache_torn_write  a JsonStore save leaves a truncated file on disk
     decode_raise      a serving decode step raises (poisons one slot)
     decode_nan        one row of the decode logits becomes NaN
+    replica_crash     a serving replica dies mid-step (front-door failover)
+    shadow_diverge    a shadow comparison is forced to report divergence
 
 Spec grammar (``LILAC_FAULTS``): comma-separated rules, each
 ``kind[:site[:prob]]``.  ``site`` is an ``fnmatch`` pattern matched
@@ -57,7 +59,8 @@ _ENV_SEED = "LILAC_FAULTS_SEED"
 #: every kind `parse_spec` accepts — a typo'd class is an error, not a
 #: silently dead rule
 KINDS = ("kernel_raise", "nan_output", "marshal_raise", "tune_raise",
-         "bake_raise", "cache_torn_write", "decode_raise", "decode_nan")
+         "bake_raise", "cache_torn_write", "decode_raise", "decode_nan",
+         "replica_crash", "shadow_diverge")
 
 
 class FaultSpecError(ValueError):

@@ -40,6 +40,7 @@ from typing import Any, Callable, Dict, FrozenSet, List, Optional, Tuple
 import jax
 
 from repro.core import detect as D
+from repro.core import faults
 from repro.core import harness as H
 from repro.core import plan as P
 from repro.core import plan_search as PS
@@ -53,10 +54,13 @@ _ENV_SHADOW = "LILAC_SHADOW_RATE"
 
 
 def shadow_rate() -> float:
-    """``LILAC_SHADOW_RATE`` in [0, 1]: the fraction of served dispatches
-    that also run the un-rewritten reference for comparison.  Read once at
-    LilacFunction construction — the steady-state dispatch must not pay
-    an environ lookup per call."""
+    """``LILAC_SHADOW_RATE`` in [0, 1]: the *floor* fraction of served
+    dispatches that also run the un-rewritten reference for comparison.
+    Since the adaptive controller landed this is re-read per dispatch
+    (via an identity check on the cached env string, so the steady-state
+    cost stays one dict lookup); divergence or quarantine incidents spike
+    the effective rate above this floor — see
+    :class:`repro.core.resilience.AdaptiveShadowRate`."""
     try:
         r = float(os.environ.get(_ENV_SHADOW, "0") or 0.0)
     except ValueError:
@@ -193,11 +197,13 @@ class LilacFunction:
         # swept schedule a plan actually used.
         self.last_schedules: List[Optional[Dict[str, Any]]] = []
         # failure containment (repro.core.resilience): per-function
-        # counters, the sampled shadow-verification rate (cached — rate 0
-        # must cost one float compare per dispatch), and the recursion
-        # guard that keeps a shadow's own dispatch from shadowing
+        # counters, the adaptive shadow-verification controller (the env
+        # rate is a floor; incidents spike it, clean checks decay it —
+        # rate 0 with no incidents must stay one dict lookup + float
+        # compare per dispatch), and the recursion guard that keeps a
+        # shadow's own dispatch from shadowing
         self.resilience_stats = R.ContainmentStats()
-        self._shadow_rate = shadow_rate()
+        self._shadow = R.AdaptiveShadowRate(_ENV_SHADOW)
         self._shadow_ctr = 0
         self._in_shadow = False
 
@@ -420,17 +426,20 @@ class LilacFunction:
 
     def _serve_plan(self, plan: P.ExecutablePlan, leaves, in_tree):
         out = self._dispatch_plan(plan, leaves)
-        if self._shadow_rate > 0.0 and not self._in_shadow:
-            out = self._maybe_shadow(plan, leaves, in_tree, out)
+        if not self._in_shadow:
+            r = self._shadow.effective()
+            if r > 0.0:
+                out = self._maybe_shadow(plan, leaves, in_tree, out, r)
         return out
 
-    def _maybe_shadow(self, plan, leaves, in_tree, out):
+    def _maybe_shadow(self, plan, leaves, in_tree, out, r):
         """Sampled shadow verification: deterministically stratified so a
         rate of r checks dispatch n iff the integer part of n*r advances —
         every window of 1/r dispatches contains exactly one check, with no
-        RNG state to perturb."""
+        RNG state to perturb.  ``r`` is the adaptive *effective* rate, so
+        an incident densifies checking immediately and a clean streak
+        relaxes it back to the floor."""
         self._shadow_ctr = n = self._shadow_ctr + 1
-        r = self._shadow_rate
         if int(n * r) == int((n - 1) * r):
             return out
         if any(isinstance(x, jax.core.Tracer) for x in leaves):
@@ -444,7 +453,9 @@ class LilacFunction:
             return out          # the reference itself failed; keep ours
         finally:
             self._in_shadow = False
-        if R.outputs_close(out, ref):
+        if R.outputs_close(out, ref) \
+                and not faults.check("shadow_diverge", "dispatch"):
+            self._shadow.clean()
             return out
         # divergence: the accelerated answer is wrong.  Serve the reference
         # for THIS call, quarantine everything the plan selected, and tear
@@ -454,6 +465,7 @@ class LilacFunction:
         return ref
 
     def _shadow_divergence(self, plan: P.ExecutablePlan):
+        self._shadow.spike("shadow divergence")
         q = R.shared_quarantine()
         for (m, name), sched in zip(plan.selections, plan.schedules):
             q.add(m.computation, name, variant_key(sched, None),
@@ -469,6 +481,37 @@ class LilacFunction:
                 entry.joint_done = False
                 entry.joint = None
 
+    def report_divergence(self, reason: str = "external divergence"):
+        """An out-of-band verifier (the serving tier's request-level shadow,
+        an application-level checksum) observed this function producing a
+        wrong answer that per-dispatch shadowing did not catch.  Responds
+        exactly like an in-band divergence: quarantine what the live plans
+        selected, tear the plans down so the next dispatch re-tunes, spike
+        the adaptive shadow rate, and count the incident."""
+        self.resilience_stats.shadow_divergences += 1
+        plans = []
+        for entry in self._compiled.values():
+            if entry.plan is not None and entry.plan not in plans:
+                plans.append(entry.plan)
+        q = R.shared_quarantine()
+        for entry in self._compiled.values():
+            if entry.plan is None and entry.pins:
+                # tuned but unbaked signature: quarantine its pinned
+                # selections directly and force a re-tune
+                flat = _flat_matches(entry.report.matches)
+                for i, (name, sched, fuse) in list(entry.pins.items()):
+                    comp = flat[i].computation if i < len(flat) else name
+                    q.add(comp, name, variant_key(sched, None),
+                          reason=reason, site=name)
+                entry.pins.clear()
+                entry.persisted = False
+                entry.joint_done = False
+                entry.joint = None
+        for plan in plans:
+            self._shadow_divergence(plan)
+        if not plans:
+            self._shadow.spike(reason)
+
     def resilience_info(self) -> Dict[str, Any]:
         """Containment / quarantine / shadow counters for this function
         plus the shared quarantine store's view — benchmarks and the chaos
@@ -479,7 +522,8 @@ class LilacFunction:
             "quarantine": q.stats.as_dict(),
             "quarantine_active": len(q.active()),
             "quarantine_path": str(q.path),
-            "shadow_rate": self._shadow_rate,
+            "shadow_rate": self._shadow.effective(),
+            "shadow": self._shadow.snapshot(),
             "disabled_matches": sum(len(e.disabled)
                                     for e in self._compiled.values()),
         }
@@ -577,7 +621,10 @@ class LilacFunction:
         def on_quarantine(m, h, vkey, reason):
             # the quarantined harness may be pinned, persisted, baked and
             # jointly-assigned for this entry: unwind all four so the next
-            # selection re-tunes and the next resolution re-bakes
+            # selection re-tunes and the next resolution re-bakes.  A
+            # quarantine is also an incident: densify shadow checking
+            # until a clean streak restores trust.
+            self._shadow.spike(f"quarantine: {reason}")
             i = entry.idx_of.get(id(m.anchor_eqn))
             pin = entry.pins.get(i) if i is not None else None
             if pin is not None and pin[0] == h.name:

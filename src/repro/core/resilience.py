@@ -27,8 +27,19 @@ transient fault — an OOM under memory pressure, a driver hiccup — does
 not permanently forfeit the fastest kernel; re-admission goes back
 through autotuning, which re-measures rather than trusting stale pins.
 
+A third piece rides on the first two: :class:`AdaptiveShadowRate`, the
+controller behind sampled shadow verification.  The env rate
+(``LILAC_SHADOW_RATE`` for dispatch-level shadowing,
+``LILAC_REQUEST_SHADOW_RATE`` for the serving tier) is a *floor*, re-read
+on every dispatch; an incident — a shadow divergence or a containment
+quarantine — spikes the effective rate by ``LILAC_SHADOW_SPIKE`` (default
+16), and a streak of clean shadow checks decays it geometrically by
+``LILAC_SHADOW_DECAY`` (default 0.5 per clean check) back to the floor.
+Verification effort concentrates exactly when trust is lowest.
+
 Env knobs: ``LILAC_QUARANTINE_CACHE`` (store path),
-``LILAC_QUARANTINE_TTL`` (seconds; ``<= 0`` means never expire).
+``LILAC_QUARANTINE_TTL`` (seconds; ``<= 0`` means never expire),
+``LILAC_SHADOW_SPIKE`` / ``LILAC_SHADOW_DECAY`` (adaptive controller).
 """
 from __future__ import annotations
 
@@ -43,7 +54,11 @@ from repro.core.jsonstore import JsonStore
 
 _ENV_PATH = "LILAC_QUARANTINE_CACHE"
 _ENV_TTL = "LILAC_QUARANTINE_TTL"
+_ENV_SPIKE = "LILAC_SHADOW_SPIKE"
+_ENV_DECAY = "LILAC_SHADOW_DECAY"
 DEFAULT_TTL_S = 3600.0
+DEFAULT_SHADOW_SPIKE = 16.0
+DEFAULT_SHADOW_DECAY = 0.5
 
 
 def default_quarantine_path() -> Path:
@@ -351,3 +366,95 @@ def outputs_close(got, want, rtol: float = 1e-4, atol: float = 1e-5) -> bool:
             if not (ga == wa).all():
                 return False
     return True
+
+
+# ---------------------------------------------------------------------------
+# Adaptive shadow rate
+# ---------------------------------------------------------------------------
+
+def shadow_spike() -> float:
+    """``LILAC_SHADOW_SPIKE``: incident multiplier (default 16, min 1)."""
+    try:
+        return max(1.0, float(os.environ.get(_ENV_SPIKE,
+                                             DEFAULT_SHADOW_SPIKE)))
+    except ValueError:
+        return DEFAULT_SHADOW_SPIKE
+
+
+def shadow_decay() -> float:
+    """``LILAC_SHADOW_DECAY``: per-clean-check multiplier decay factor
+    (default 0.5, clamped to (0, 1))."""
+    try:
+        d = float(os.environ.get(_ENV_DECAY, DEFAULT_SHADOW_DECAY))
+    except ValueError:
+        return DEFAULT_SHADOW_DECAY
+    return min(max(d, 1e-6), 0.999999)
+
+
+class AdaptiveShadowRate:
+    """Incident-driven controller for sampled shadow verification.
+
+    The env rate (``env_var``, or the explicit ``floor`` override) is a
+    *floor*, not the rate: ``effective() = min(1, floor * multiplier)``.
+    An incident (:meth:`spike` — a shadow divergence or a containment
+    quarantine) raises the multiplier to ``LILAC_SHADOW_SPIKE``; each
+    verified-clean shadow check (:meth:`clean`) decays it geometrically by
+    ``LILAC_SHADOW_DECAY``.  Decay is evidence-driven — only a check that
+    actually ran and matched counts, not mere passage of dispatches.
+
+    The floor is re-read from the environment on every call, so operators
+    can turn verification up on a live process; the re-read is an identity
+    check on the cached env string, one dict lookup on the hot path.
+    """
+
+    def __init__(self, env_var: str = "LILAC_SHADOW_RATE",
+                 floor: Optional[float] = None):
+        self.env_var = env_var
+        self._floor_override = floor
+        self._raw: Optional[str] = object()  # sentinel != any env string
+        self._floor_cached = 0.0
+        self.multiplier = 1.0
+        self.peak_multiplier = 1.0
+        self.incidents = 0
+        self.clean_streak = 0
+        self.checks = 0
+
+    def floor(self) -> float:
+        if self._floor_override is not None:
+            return min(max(float(self._floor_override), 0.0), 1.0)
+        raw = os.environ.get(self.env_var)
+        if raw is not self._raw:
+            self._raw = raw
+            try:
+                self._floor_cached = min(max(float(raw or 0.0), 0.0), 1.0)
+            except ValueError:
+                self._floor_cached = 0.0
+        return self._floor_cached
+
+    def effective(self) -> float:
+        return min(1.0, self.floor() * self.multiplier)
+
+    def spike(self, reason: str = ""):
+        self.incidents += 1
+        self.clean_streak = 0
+        self.multiplier = max(self.multiplier, shadow_spike())
+        self.peak_multiplier = max(self.peak_multiplier, self.multiplier)
+
+    def clean(self):
+        self.checks += 1
+        self.clean_streak += 1
+        if self.multiplier > 1.0:
+            self.multiplier = max(1.0, self.multiplier * shadow_decay())
+
+    def snapshot(self) -> Dict[str, Any]:
+        return {
+            "floor": self.floor(),
+            "multiplier": self.multiplier,
+            "peak_multiplier": self.peak_multiplier,
+            "effective": self.effective(),
+            "incidents": self.incidents,
+            "clean_streak": self.clean_streak,
+            "checks": self.checks,
+            "spike": shadow_spike(),
+            "decay": shadow_decay(),
+        }

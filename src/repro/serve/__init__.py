@@ -3,6 +3,7 @@
 Public surface::
 
     from repro.serve import (Engine, ServeConfig, build_engine,
+                             FrontDoor, build_fleet, default_replicas,
                              Scheduler, Request, SchedulerFull,
                              BucketPolicy, BucketError, parse_buckets,
                              default_buckets,
@@ -10,11 +11,12 @@ Public surface::
                              SyntheticWorkload)
 
 See ``docs/serving.md`` for the scheduler lifecycle, the bucket/prewarm
-semantics and the metrics schema.
+semantics, the multi-replica front door and the metrics schema.
 """
 from repro.serve.buckets import (BucketError, BucketPolicy, default_buckets,
                                  parse_buckets)
 from repro.serve.engine import Engine, ServeConfig, build_engine
+from repro.serve.frontdoor import FrontDoor, build_fleet, default_replicas
 from repro.serve.metrics import (ServeMetrics, latency_histogram,
                                  percentiles)
 from repro.serve.packing import (moe_ffn_padded, moe_ffn_ragged, pack,
@@ -25,6 +27,7 @@ from repro.serve.workload import SyntheticWorkload
 __all__ = [
     "BucketError", "BucketPolicy", "default_buckets", "parse_buckets",
     "Engine", "ServeConfig", "build_engine",
+    "FrontDoor", "build_fleet", "default_replicas",
     "ServeMetrics", "latency_histogram", "percentiles",
     "moe_ffn_padded", "moe_ffn_ragged", "pack", "padding_waste", "unpack",
     "Request", "Scheduler", "SchedulerFull",

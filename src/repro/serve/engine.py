@@ -72,6 +72,14 @@ class ServeConfig:
     # (bounded retry-with-backoff on a full queue) instead of a single
     # SchedulerFull-raising attempt
     admit_deadline_s: Optional[float] = None
+    # request-level shadow verification: the floor fraction of finished
+    # requests re-decoded solo on this engine and compared token-for-token
+    # against the batched stream (catches slot mix-ups / compaction bugs
+    # the per-dispatch shadow cannot see).  None -> the
+    # LILAC_REQUEST_SHADOW_RATE env var (default 0 = off); the effective
+    # rate is adaptive — divergences spike it, clean checks decay it
+    # (see repro.core.resilience.AdaptiveShadowRate)
+    request_shadow_rate: Optional[float] = None
 
     def replace(self, **kw) -> "ServeConfig":
         return dataclasses.replace(self, **kw)
@@ -98,6 +106,12 @@ class Engine:
         self._cache = None
         self._shape: Optional[Tuple[int, int]] = None    # (batch, seq) bucket
         self._prewarmed: set = set()
+        from repro.core.resilience import AdaptiveShadowRate
+        self._request_shadow = AdaptiveShadowRate(
+            "LILAC_REQUEST_SHADOW_RATE",
+            floor=self.config.request_shadow_rate)
+        self._req_shadow_ctr = 0
+        self.metrics.set_request_shadow_provider(self._request_shadow.snapshot)
         if self.config.use_lilac:
             from repro import lilac
             self._decode = lilac.compile(
@@ -293,13 +307,47 @@ class Engine:
                                    f"steps")
         return self.metrics.snapshot()
 
+    def drain(self) -> List[Request]:
+        """Remove and return every in-flight request (active in slot
+        order, then waiting in arrival order), resetting the replica's
+        batch state.  The front door calls this on a failed replica; the
+        caller discards partial generation before resubmitting — greedy
+        decode is deterministic, so a re-run on a survivor regenerates
+        the identical token stream."""
+        out = self.scheduler.drain()
+        self._cache = None
+        self._shape = None
+        return out
+
+    def replay_solo(self, req: Request) -> List[int]:
+        """Re-decode a finished request's stream solo ON THIS ENGINE: a
+        fresh single-request cache at the smallest batch bucket, the same
+        compiled prefill/install/decode the batched path used.  Returns
+        exactly ``len(req.tokens)`` greedy tokens — the reference the
+        request-level shadow compares against."""
+        B = self.buckets.batch_bucket(1)
+        S = self.buckets.seq_bucket(req.prompt_len + req.max_new_tokens)
+        cache = self.model.init_cache(B, S)
+        logits, caches = self._prefill(self.params, req.prompt[None, :])
+        cache = self._install(cache, caches, 0, req.prompt_len, S)
+        toks = [int(np.argmax(np.asarray(logits)[0]))]
+        tokens = np.zeros((B, 1), np.int32)
+        pos = np.zeros((B,), np.int32)
+        while len(toks) < len(req.tokens):
+            tokens[0, 0] = toks[-1]
+            pos[0] = req.prompt_len + len(toks) - 1
+            logits, cache = self._decode(self.params, cache, tokens, pos)
+            toks.append(int(np.argmax(np.asarray(logits)[0])))
+        return toks
+
     def generate_solo(self, prompt, max_new_tokens: int, *,
                       eos_id: Optional[int] = None) -> List[int]:
         """Run one request on a FRESH engine (same model/params/buckets,
         no prewarm) — the per-request reference stream the batching
         property tests compare against."""
         eng = Engine(self.model, self.params,
-                     self.config.replace(prewarm_on_start=False),
+                     self.config.replace(prewarm_on_start=False,
+                                         request_shadow_rate=0.0),
                      clock=self.clock)
         req = Request(prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens, eos_id=eos_id)
@@ -429,7 +477,41 @@ class Engine:
                 self.metrics.record_fault_eviction(r.failed)
             self.metrics.record_finish(r.rid, len(r.tokens),
                                        now - r.arrival_t)
+            if r.failed is None and r.tokens:
+                self._maybe_shadow_request(r)
         return finished
+
+    def _maybe_shadow_request(self, req: Request):
+        """Request-level shadow verification on a deterministic stratified
+        sample of finished requests (same scheme as the dispatch-level
+        shadow: rate r checks finish n iff the integer part of n*r
+        advances).  The batched stream is compared token-for-token with a
+        solo replay on this same engine — any difference means the
+        *batched path* (slot map, compaction, cache moves) corrupted the
+        request, which per-dispatch shadowing of the decode fn cannot
+        see.  Divergence feeds the compiled decode's quarantine→re-tune
+        path and spikes both adaptive rates."""
+        from repro.core import faults
+        r = self._request_shadow.effective()
+        if r <= 0.0:
+            return
+        self._req_shadow_ctr = n = self._req_shadow_ctr + 1
+        if int(n * r) == int((n - 1) * r):
+            return
+        try:
+            solo = self.replay_solo(req)
+        except Exception:
+            return      # the replay itself failed; never punish the served path
+        diverged = (solo != list(req.tokens)
+                    or faults.check("shadow_diverge", "request"))
+        self.metrics.record_request_shadow(diverged)
+        if not diverged:
+            self._request_shadow.clean()
+            return
+        self._request_shadow.spike("request shadow divergence")
+        report = getattr(self._decode, "report_divergence", None)
+        if report is not None:
+            report(reason=f"request-shadow divergence (rid {req.rid})")
 
 
 def build_engine(arch: str = "olmoe-1b-7b", *, smoke: bool = True,

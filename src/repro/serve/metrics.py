@@ -89,7 +89,10 @@ class ServeMetrics:
         self.deadline_evictions = 0    # subset of fault_evictions: deadline
         self.admission_retries = 0     # try_admit backoff sleeps
         self.admission_timeouts = 0    # try_admit gave up within deadline
+        self.request_shadow_checks = 0       # finished requests re-decoded solo
+        self.request_shadow_divergences = 0  # ... whose token streams differed
         self._resilience_provider = None   # e.g. LilacFunction.resilience_info
+        self._request_shadow_provider = None  # AdaptiveShadowRate.snapshot
 
     # -- recording hooks (called by the engine) --------------------------
 
@@ -144,6 +147,16 @@ class ServeMetrics:
     def record_admission_timeout(self):
         self.admission_timeouts += 1
 
+    def record_request_shadow(self, diverged: bool):
+        self.request_shadow_checks += 1
+        if diverged:
+            self.request_shadow_divergences += 1
+
+    def set_request_shadow_provider(self, fn):
+        """``fn() -> dict`` (an ``AdaptiveShadowRate.snapshot``) merged into
+        the snapshot's resilience section as ``request_shadow``."""
+        self._request_shadow_provider = fn
+
     def set_resilience_provider(self, fn):
         """``fn() -> dict`` merged into the snapshot's resilience section
         (the engine wires ``LilacFunction.resilience_info`` here so one
@@ -196,7 +209,14 @@ class ServeMetrics:
             "deadline_evictions": self.deadline_evictions,
             "admission_retries": self.admission_retries,
             "admission_timeouts": self.admission_timeouts,
+            "request_shadow_checks": self.request_shadow_checks,
+            "request_shadow_divergences": self.request_shadow_divergences,
         }
+        if self._request_shadow_provider is not None:
+            try:
+                out["request_shadow"] = self._request_shadow_provider()
+            except Exception:
+                pass
         if self._resilience_provider is not None:
             try:
                 out["lilac"] = self._resilience_provider()

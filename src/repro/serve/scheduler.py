@@ -139,6 +139,17 @@ class Scheduler:
                 delay = delay * 2 if delay > 0 else backoff_s
         return False
 
+    def drain(self) -> List[Request]:
+        """Remove and return every request this scheduler holds — active
+        (slot order) then waiting (arrival order) — leaving it empty.  The
+        front door calls this on a crashed replica to redistribute its
+        in-flight work; partial generation state on the returned requests
+        is the caller's to reset."""
+        out = list(self.active) + list(self.waiting)
+        self.active = []
+        self.waiting.clear()
+        return out
+
     @property
     def queue_depth(self) -> int:
         return len(self.waiting)

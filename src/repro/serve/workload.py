@@ -32,6 +32,13 @@ class SyntheticWorkload:
     # on the request path
     prompt_grid: Tuple[int, ...] = ()
 
+    def _gap(self, j: int) -> float:
+        """Exponential inter-arrival gap before request ``j`` — pure in
+        ``(seed, j)``, so any prefix of the arrival process replays
+        identically regardless of how it is enumerated."""
+        return float(np.random.default_rng((self.seed, 7, j)).exponential(
+            1.0 / self.rate_rps))
+
     def request_at(self, i: int) -> Tuple[float, Request]:
         """(arrival offset seconds, request) for index ``i``; pure in
         ``(seed, i)`` except the arrival prefix, which is pure in
@@ -49,13 +56,22 @@ class SyntheticWorkload:
                               size=plen).astype(np.int32)
         arrival = 0.0
         if self.rate_rps > 0:
-            gaps = [np.random.default_rng((self.seed, 7, j)).exponential(
-                1.0 / self.rate_rps) for j in range(i + 1)]
-            arrival = float(np.sum(gaps))
+            arrival = float(sum(self._gap(j) for j in range(i + 1)))
         return arrival, Request(prompt=prompt, max_new_tokens=nnew)
 
     def requests(self) -> List[Tuple[float, Request]]:
-        return [self.request_at(i) for i in range(self.n_requests)]
+        """All ``(arrival, request)`` pairs.  Arrivals accumulate the gap
+        sequence once (O(n) total, vs. O(n^2) if each index re-summed its
+        own prefix via ``request_at``)."""
+        burst = dataclasses.replace(self, rate_rps=0.0)
+        out: List[Tuple[float, Request]] = []
+        arrival = 0.0
+        for i in range(self.n_requests):
+            _, req = burst.request_at(i)
+            if self.rate_rps > 0:
+                arrival += self._gap(i)
+            out.append((arrival, req))
+        return out
 
     def __iter__(self) -> Iterator[Tuple[float, Request]]:
         return iter(self.requests())

@@ -1,0 +1,328 @@
+"""Front-door tests: hashed routing, replica-crash failover with zero
+silent drops, telemetry-driven health checks, request-level shadow
+verification, the adaptive shadow-rate controller, and the cross-replica
+quarantine-sharing (concurrent-writer JsonStore merge) invariant.
+
+All fleet mechanics run on the mock rolling-hash model from
+``test_serve`` — the streams are deterministic, so "the survivor
+regenerates the identical tokens" is checked exactly, with no
+accelerator in the loop.
+"""
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import faults
+from repro.core import resilience as R
+from repro.serve import (BucketPolicy, Engine, FrontDoor, Request,
+                         ServeConfig, default_replicas)
+
+from test_serve import MockModel, _solo_stream
+
+pytestmark = []
+
+
+def _mock_fleet(n=3, *, fault_streak=8, request_shadow_rate=None, **kw):
+    cfg = ServeConfig(buckets=BucketPolicy(batch=(1, 2, 4), seq=(32, 64)),
+                      use_lilac=False, jit_prefill=False,
+                      request_shadow_rate=request_shadow_rate, **kw)
+    engines = [Engine(MockModel(), params=None, config=cfg)
+               for _ in range(n)]
+    return FrontDoor(engines, fault_streak=fault_streak)
+
+
+def _req(prompt, max_new):
+    return Request(prompt=np.asarray(prompt, np.int32),
+                   max_new_tokens=max_new)
+
+
+def _submit_many(fd, n, max_new=6, plen=5, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(n):
+        r = _req(rng.integers(1, 9000, size=plen), max_new)
+        assert fd.submit(r)
+        reqs.append(r)
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# routing + steady state
+# ---------------------------------------------------------------------------
+
+def test_frontdoor_routes_and_streams_match_solo():
+    fd = _mock_fleet(3)
+    reqs = _submit_many(fd, 12)
+    used = {fd.assignment[r.rid] for r in reqs}
+    assert len(used) > 1                      # hashing actually spreads load
+    fd.run_until_idle()
+    assert fd.accounted()
+    for r in reqs:
+        assert r.failed is None
+        assert r.tokens == _solo_stream(list(r.prompt), r.max_new_tokens)
+    snap = fd.snapshot()
+    assert snap["fleet"]["finished"] == 12
+    assert snap["fleet"]["failovers"] == 0
+    assert snap["fleet"]["all_requests_accounted_for"]
+
+
+def test_default_replicas_env(monkeypatch):
+    monkeypatch.delenv("LILAC_SERVE_REPLICAS", raising=False)
+    assert default_replicas() == 2
+    monkeypatch.setenv("LILAC_SERVE_REPLICAS", "5")
+    assert default_replicas() == 5
+    monkeypatch.setenv("LILAC_SERVE_REPLICAS", "junk")
+    assert default_replicas() == 2
+
+
+# ---------------------------------------------------------------------------
+# replica_crash failover (the tentpole acceptance property)
+# ---------------------------------------------------------------------------
+
+def test_replica_crash_redistributes_without_loss():
+    """Killing 1 of 3 replicas mid-run loses zero requests: drained work
+    is replayed on survivors and every stream stays bit-identical to the
+    solo reference."""
+    fd = _mock_fleet(3)
+    reqs = _submit_many(fd, 15, max_new=8)
+    victim = fd.assignment[reqs[0].rid]
+    for _ in range(2):                    # mid-burst: some tokens exist
+        fd.step()
+    with faults.inject(f"replica_crash:replica{victim}") as plan:
+        fd.step()
+    assert plan.fired and plan.fired[0][0] == "replica_crash"
+    assert not fd.replicas[victim].healthy
+    assert "crash" in fd.replicas[victim].reason
+    fd.run_until_idle()
+    assert fd.accounted()
+    assert fd.failovers == 1
+    assert fd.redistributed > 0
+    assert fd.lost == 0
+    for r in reqs:
+        assert r.failed is None
+        assert r.tokens == _solo_stream(list(r.prompt), r.max_new_tokens)
+    snap = fd.snapshot()
+    assert snap["fleet"]["healthy"] == 2
+    assert snap["fleet"]["redistributed"] == fd.redistributed
+
+
+def test_all_replicas_lost_fails_loudly():
+    fd = _mock_fleet(2)
+    reqs = _submit_many(fd, 6)
+    with faults.inject("replica_crash"):      # every site: whole fleet dies
+        fd.step()
+    assert not fd.healthy_replicas()
+    assert fd.accounted()                     # failed loudly, not dropped
+    for r in reqs:
+        assert r.failed == "replica_lost"
+        assert r.finish_t is not None
+    snap = fd.snapshot()
+    assert snap["fleet"]["replica_lost"] == 6
+    assert snap["fleet"]["failed_reasons"] == {"replica_lost": 6}
+
+
+def test_past_deadline_request_lost_at_failover():
+    t = [0.0]
+    cfg = ServeConfig(buckets=BucketPolicy(batch=(1, 2), seq=(32,)),
+                      use_lilac=False, jit_prefill=False)
+    engines = [Engine(MockModel(), params=None, config=cfg,
+                      clock=lambda: t[0]) for _ in range(2)]
+    fd = FrontDoor(engines, clock=lambda: t[0])
+    fresh = _req([1, 2, 3], 4)
+    stale = _req([4, 5, 6], 4)
+    stale.deadline_s = 0.5
+    assert fd.submit(fresh) and fd.submit(stale)
+    victim = fd.assignment[stale.rid]
+    t[0] = 1.0                              # stale is now past its deadline
+    with faults.inject(f"replica_crash:replica{victim}"):
+        fd.step()
+    assert stale.failed == "replica_lost"   # loud, attributed — not retried
+    fd.run_until_idle()
+    assert fd.accounted()
+    if fd.assignment[fresh.rid] != victim or fresh.done:
+        assert fresh.failed is None
+
+
+def test_health_check_retires_fault_streak_replica():
+    """A replica whose every step burns a decode fault is condemned by
+    its own ServeMetrics counters and drained before it destroys its
+    whole queue."""
+
+    class BrokenModel(MockModel):
+        def decode(self, params, cache, tokens, pos):
+            raise RuntimeError("hardware gone")
+
+    cfg = ServeConfig(buckets=BucketPolicy(batch=(1, 2, 4), seq=(32,)),
+                      use_lilac=False, jit_prefill=False)
+    healthy = Engine(MockModel(), params=None, config=cfg)
+    broken = Engine(BrokenModel(), params=None, config=cfg)
+    fd = FrontDoor([healthy, broken], fault_streak=2)
+    reqs = _submit_many(fd, 10, max_new=4)
+    fd.run_until_idle()
+    assert not fd.replicas[1].healthy
+    assert "unhealthy" in fd.replicas[1].reason
+    assert fd.accounted()
+    # casualties are only the slots poisoned before the streak tripped;
+    # everything drained afterwards finished correctly on the survivor
+    for r in reqs:
+        if r.failed is None:
+            assert r.tokens == _solo_stream(list(r.prompt),
+                                            r.max_new_tokens)
+        else:
+            assert r.failed.startswith("decode")
+    assert fd.redistributed > 0
+
+
+# ---------------------------------------------------------------------------
+# adaptive shadow rate (unit)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_shadow_rate_floor_reread(monkeypatch):
+    monkeypatch.delenv("LILAC_SHADOW_RATE", raising=False)
+    a = R.AdaptiveShadowRate()
+    assert a.floor() == 0.0 and a.effective() == 0.0
+    monkeypatch.setenv("LILAC_SHADOW_RATE", "0.25")
+    assert a.floor() == 0.25                  # re-read, not compile-cached
+    monkeypatch.setenv("LILAC_SHADOW_RATE", "2.5")
+    assert a.floor() == 1.0                   # clamped
+    b = R.AdaptiveShadowRate(floor=0.125)
+    assert b.floor() == 0.125                 # explicit override wins
+
+
+def test_adaptive_shadow_rate_spike_and_decay(monkeypatch):
+    monkeypatch.delenv("LILAC_SHADOW_SPIKE", raising=False)
+    monkeypatch.delenv("LILAC_SHADOW_DECAY", raising=False)
+    a = R.AdaptiveShadowRate(floor=0.05)
+    a.spike("divergence")
+    assert a.multiplier == 16.0
+    assert a.effective() == pytest.approx(0.8)
+    assert a.peak_multiplier == 16.0
+    seen = []
+    for _ in range(5):
+        a.clean()
+        seen.append(a.multiplier)
+    assert seen == [8.0, 4.0, 2.0, 1.0, 1.0]  # geometric, floored at 1
+    assert a.effective() == pytest.approx(0.05)
+    assert a.peak_multiplier == 16.0          # peak is sticky for gates
+    a.spike("again")
+    assert a.clean_streak == 0
+
+
+def test_adaptive_shadow_rate_env_knobs(monkeypatch):
+    monkeypatch.setenv("LILAC_SHADOW_SPIKE", "4")
+    monkeypatch.setenv("LILAC_SHADOW_DECAY", "0.25")
+    a = R.AdaptiveShadowRate(floor=1.0)
+    a.spike("x")
+    assert a.multiplier == 4.0
+    assert a.effective() == 1.0               # capped at 1
+    a.clean()
+    assert a.multiplier == 1.0                # 4 * 0.25
+    snap = a.snapshot()
+    assert snap["spike"] == 4.0 and snap["decay"] == 0.25
+    assert snap["incidents"] == 1 and snap["checks"] == 1
+
+
+# ---------------------------------------------------------------------------
+# request-level shadow verification
+# ---------------------------------------------------------------------------
+
+def test_request_shadow_clean_streak():
+    fd = _mock_fleet(2, request_shadow_rate=1.0)
+    _submit_many(fd, 8, max_new=5)
+    fd.run_until_idle()
+    snap = fd.snapshot()
+    assert snap["resilience"]["request_shadow_checks"] == 8
+    assert snap["resilience"]["request_shadow_divergences"] == 0
+    assert snap["resilience"]["request_shadow_peak_multiplier"] == 1.0
+
+
+def test_request_shadow_forced_divergence_spikes_then_decays():
+    eng = Engine(MockModel(), params=None, config=ServeConfig(
+        buckets=BucketPolicy(batch=(1, 2), seq=(32,)),
+        use_lilac=False, jit_prefill=False, request_shadow_rate=1.0))
+    assert eng.submit(_req([1, 2, 3], 4))
+    with faults.inject("shadow_diverge:request"):
+        eng.run_until_idle()
+    assert eng.metrics.request_shadow_divergences == 1
+    shadow = eng._request_shadow
+    assert shadow.peak_multiplier >= 8.0
+    for i in range(8):                        # clean traffic decays the spike
+        assert eng.submit(_req([7 + i, 8, 9], 3))
+    eng.run_until_idle()
+    assert eng.metrics.request_shadow_divergences == 1
+    assert shadow.multiplier < 2.0
+    assert shadow.peak_multiplier >= 8.0
+
+
+def test_request_shadow_sampling_is_stratified():
+    eng = Engine(MockModel(), params=None, config=ServeConfig(
+        buckets=BucketPolicy(batch=(1, 2), seq=(32,)),
+        use_lilac=False, jit_prefill=False, request_shadow_rate=0.25))
+    for i in range(8):
+        assert eng.submit(_req([i + 1, 2, 3], 3))
+    eng.run_until_idle()
+    assert eng.metrics.request_shadow_checks == 2     # 8 finishes * 0.25
+
+
+# ---------------------------------------------------------------------------
+# empty-series metrics guard (satellite)
+# ---------------------------------------------------------------------------
+
+def test_zero_request_replica_snapshots_cleanly():
+    """A replica that served nothing must snapshot (and JSON-serialize)
+    without raising — fleet aggregation hits this on every fresh boot."""
+    import warnings
+    fd = _mock_fleet(3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")        # numpy empty-slice warnings
+        snap = fd.snapshot()
+    assert snap["fleet"]["submitted"] == 0
+    assert snap["fleet"]["all_requests_accounted_for"]
+    rep = snap["replicas"][0]["metrics"]
+    assert np.isnan(rep["ttft_s"]["p50"])
+    assert rep["decode_step_s"]["histogram"] == {"edges_s": [], "counts": []}
+    json.dumps(snap)                          # NaNs allowed, nothing raises
+
+
+# ---------------------------------------------------------------------------
+# cross-replica quarantine sharing: concurrent-writer JsonStore merge
+# ---------------------------------------------------------------------------
+
+_WRITER = """
+import sys
+from repro.core.resilience import QuarantineStore
+path, harness = sys.argv[1], sys.argv[2]
+q = QuarantineStore(path)
+q.load()
+q.add("spmv.csr", harness, reason="chaos incident", site=harness)
+print("ok")
+"""
+
+
+def test_concurrent_quarantine_writers_both_survive(tmp_path):
+    """Two processes quarantine different harnesses into one store file;
+    the flock merge-on-save keeps both records — the invariant that lets
+    N replicas (or N hosts) share one incident store."""
+    import os
+    path = tmp_path / "quarantine.json"
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _WRITER, str(path), harness],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, env=env)
+        for harness in ("pallas.ell", "jnp.segment")]
+    for p in procs:
+        _, err = p.communicate(timeout=120)
+        assert p.returncode == 0, err.decode()
+    from repro.core.resilience import QuarantineStore
+    store = QuarantineStore(path)
+    store.load()
+    keys = set(store.active())
+    assert "spmv.csr|pallas.ell|default" in keys
+    assert "spmv.csr|jnp.segment|default" in keys

@@ -324,6 +324,62 @@ def test_shadow_divergence_quarantines_and_retunes(problem, monkeypatch):
     assert fast.resilience_info()["containment"]["shadow_divergences"] == 1
 
 
+def test_shadow_rate_spikes_on_divergence_then_decays(problem, monkeypatch):
+    """LILAC_SHADOW_RATE is a floor: a caught divergence spikes the
+    effective rate by LILAC_SHADOW_SPIKE, and a clean streak decays it
+    geometrically back toward the floor."""
+    monkeypatch.setenv("LILAC_SHADOW_RATE", "1.0")
+    fast = lilac.compile(naive_spmv, mode="host")
+    _assert_oracle(fast(*_args(problem)), problem)     # tune + bake
+    sane = fast._dispatch_plan
+    monkeypatch.setattr(
+        fast, "_dispatch_plan",
+        lambda plan, leaves: jax.tree.map(lambda x: x + 1.0,
+                                          sane(plan, leaves)))
+    _assert_oracle(fast(*_args(problem)), problem)     # divergence caught
+    shadow = fast.resilience_info()["shadow"]
+    assert shadow["multiplier"] >= 8.0
+    assert shadow["peak_multiplier"] >= 8.0
+    assert shadow["incidents"] >= 1
+    monkeypatch.setattr(fast, "_dispatch_plan", sane)
+    for _ in range(8):                                 # clean streak decays
+        _assert_oracle(fast(*_args(problem)), problem)
+    shadow = fast.resilience_info()["shadow"]
+    assert shadow["multiplier"] < 2.0
+    assert shadow["peak_multiplier"] >= 8.0            # sticky for gates
+    assert shadow["floor"] == 1.0
+
+
+def test_shadow_rate_spikes_on_quarantine(problem, monkeypatch):
+    """A containment quarantine (not just a shadow divergence) is an
+    incident: the adaptive controller densifies checking after one."""
+    monkeypatch.setenv("LILAC_SHADOW_RATE", "0.05")
+    fast = lilac.compile(naive_spmv, mode="host")
+    with faults.inject("kernel_raise"):
+        _assert_oracle(fast(*_args(problem)), problem)  # contained + correct
+    info = fast.resilience_info()
+    assert info["containment"]["quarantines"] >= 1
+    assert info["shadow"]["multiplier"] >= 8.0
+    assert info["shadow_rate"] == pytest.approx(
+        min(1.0, 0.05 * info["shadow"]["multiplier"]))
+
+
+def test_report_divergence_quarantines_and_retunes(problem, monkeypatch):
+    """The serving tier's out-of-band verifier feeds the same response
+    path as an in-band shadow divergence: quarantine the live plan's
+    selections, drop the plan, spike the rate, re-tune on next call."""
+    fast = lilac.compile(naive_spmv, mode="host")
+    _assert_oracle(fast(*_args(problem)), problem)     # tune + bake
+    assert fast._last_plan is not None
+    fast.report_divergence(reason="request-shadow divergence (rid 7)")
+    assert fast._last_plan is None
+    info = fast.resilience_info()
+    assert info["containment"]["shadow_divergences"] == 1
+    assert info["quarantine_active"] >= 1
+    assert info["shadow"]["multiplier"] >= 8.0
+    _assert_oracle(fast(*_args(problem)), problem)     # re-tunes, stays right
+
+
 # ---------------------------------------------------------------------------
 # serving tier
 # ---------------------------------------------------------------------------

@@ -20,7 +20,10 @@ Gates (exit 1 on any failure):
 
 Seeds rotate (``--seed``; CI passes the run number) so successive runs
 exercise different fault interleavings while each run stays exactly
-reproducible.  All persistent caches are redirected into a scratch
+reproducible.  On any gate failure the exact fixed-seed repro command is
+printed (``CHAOS_SEED=<n> python tools/chaos_smoke.py ...``) so the
+failing interleaving can be replayed locally without digging the seed
+out of CI logs.  All persistent caches are redirected into a scratch
 directory: a chaos run must never poison the perf caches other jobs
 share.
 
@@ -30,7 +33,6 @@ CLI:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 import tempfile
@@ -42,6 +44,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 CHAOS_SPEC = ("kernel_raise:*:0.4,nan_output:*:0.3,marshal_raise:*:0.3,"
               "tune_raise:*:0.4,bake_raise:*:0.4,cache_torn_write:*:0.5")
 SERVE_SPEC = "decode_raise:decode:0.1,decode_nan:decode:0.1"
+
+
+def repro_command(seed: int, out_path: str | None = None,
+                  skip_benchmarks: bool = False) -> str:
+    """The exact shell command that replays this run's fault interleaving.
+
+    The fault plan is a pure function of (spec, seed), and all caches are
+    scratch-redirected, so seed alone pins the whole run.
+    """
+    cmd = f"CHAOS_SEED={seed} python tools/chaos_smoke.py"
+    if out_path:
+        cmd += f" --out {out_path}"
+    if skip_benchmarks:
+        cmd += " --skip-benchmarks"
+    return cmd
 
 
 def _redirect_caches(scratch: str):
@@ -142,8 +159,15 @@ def run(seed: int = 0, out_path: str | None = None,
         and all(p["ok"] for p in sweep["problems"].values()))
 
     # quarantine persistence: the incidents this run provoked must be on
-    # disk, readable by a FRESH store (what the next process sees)
-    from repro.core.resilience import QuarantineStore
+    # disk, readable by a FRESH store (what the next process sees).  A
+    # chaos plan that tears cache writes can leave the LAST in-run save
+    # truncated on disk — so flush the shared in-memory incident view now
+    # that the fault context has exited (the clean-shutdown flush a real
+    # process performs), re-merging every record over any torn file.  The
+    # torn-file recovery path itself stays covered by
+    # tests/test_resilience.py.
+    from repro.core.resilience import QuarantineStore, shared_quarantine
+    shared_quarantine().save()
     q = QuarantineStore(os.environ["LILAC_QUARANTINE_CACHE"])
     persisted = len(q.active())
     report["quarantine_records_on_disk"] = persisted
@@ -153,6 +177,8 @@ def run(seed: int = 0, out_path: str | None = None,
     report["passed"] = (report["zero_uncontained_exceptions"]
                         and report["results_match_oracle"]
                         and report["quarantines_persisted"])
+    report["repro_command"] = repro_command(
+        seed, out_path, skip_benchmarks=skip_benchmarks)
     print(f"chaos_smoke seed={seed}: fired={sweep['faults_fired']} "
           f"quarantines={sweep['quarantines']} "
           f"fallbacks={sweep['fallbacks']} persisted={persisted}")
@@ -166,6 +192,9 @@ def run(seed: int = 0, out_path: str | None = None,
         if not b.get("ok"):
             print(f"BENCHMARK {name} failed:\n{b.get('traceback')}",
                   file=sys.stderr)
+    if not report["passed"]:
+        print(f"GATE FAILURE — replay this exact fault interleaving with:\n"
+              f"  {report['repro_command']}", file=sys.stderr)
     if out_path:
         from benchmarks.common import write_json_report
         write_json_report(out_path, report)
